@@ -1,0 +1,91 @@
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline tables.
+
+Joins the lowering-proof sweep (dryrun_production.jsonl: both meshes,
+memory_analysis) with the exact-cost probe sweep (dryrun_probe.jsonl:
+single-pod, scan-unrolled linear-probe totals) into markdown.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.roofline import (load_records, model_flops, roofline_terms,
+                                 PEAK_FLOPS)
+
+
+def fmt_bytes(n):
+    if n is None:
+        return "-"
+    return f"{n / 2**30:.1f}Gi"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def main(prod_path="dryrun_production.jsonl",
+         probe_path="dryrun_probe.jsonl"):
+    from repro.configs import get_config
+    from repro.launch.specs import INPUT_SHAPES
+
+    prod = {(r["arch"], r["shape"], r["mesh"]): r
+            for r in load_records(prod_path)}
+    probe = {(r["arch"], r["shape"]): r for r in load_records(probe_path)
+             if r.get("status") == "OK"}
+
+    print("### §Dry-run — lowering proof (both meshes, memory analysis)\n")
+    print("| arch | shape | mesh | status | temp/dev | args/dev | "
+          "collectives seen |")
+    print("|---|---|---|---|---|---|---|")
+    for (arch, shape, mesh), r in sorted(prod.items()):
+        if r["status"] != "OK":
+            print(f"| {arch} | {shape} | {mesh} | {r['status']} | - | - | - |")
+            continue
+        coll = ",".join(sorted(r.get("collectives", {})))
+        print(f"| {arch} | {shape} | {mesh} | OK | "
+              f"{fmt_bytes(r.get('temp_size_in_bytes'))} | "
+              f"{fmt_bytes(r.get('argument_size_in_bytes'))} | {coll} |")
+
+    print("\n### §Roofline — exact per-step terms "
+          "(single-pod 16x16, probe-exact costs)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "MODEL_FLOPs | MODEL/HLO | one-line diagnosis |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape), r in sorted(probe.items()):
+        t = roofline_terms(r)
+        cfg = get_config(arch)
+        case = INPUT_SHAPES[shape]
+        mf = model_flops(cfg, case)
+        ratio = mf / (r["flops"] * r["n_devices"])
+        diag = diagnose(arch, shape, t, ratio)
+        print(f"| {arch} | {shape} | {fmt_s(t['compute_s'])} | "
+              f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+              f"{t['dominant']} | {mf:.2e} | {ratio:.3f} | {diag} |")
+
+
+def diagnose(arch, shape, t, ratio):
+    if t["dominant"] == "memory" and "prefill" in shape:
+        return ("s^2 fp32 score/prob HBM traffic (einsum attention path); "
+                "flash kernel or bf16 probs moves it")
+    if t["dominant"] == "memory" and shape == "train_4k":
+        return ("saved activations incl. fp32 attention probs; remat + "
+                "flash kernel")
+    if t["dominant"] == "collective" and "decode" in shape:
+        return ("FSDP weight all-gather per token; pure-TP weights for "
+                "serving removes it")
+    if t["dominant"] == "memory" and shape == "long_500k":
+        return "state/cache streaming; already near arithmetic floor"
+    if t["dominant"] == "collective":
+        return "pod/TP collective; overlap or bf16 wire format"
+    if t["dominant"] == "memory":
+        return "weight/KV-cache streaming dominates (batch too small to amortize)"
+    return "compute-bound: near roofline for this shape"
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,114 @@
+"""Roofline-term computation from dry-run records (§Roofline).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI. Terms per (arch x shape x mesh):
+
+    compute_s    = HLO_FLOPs / (chips * 197e12)
+    memory_s     = HLO_bytes / (chips * 819e9)
+    collective_s = modeled_link_bytes / (chips * 50e9)
+
+MODEL_FLOPS = 6 N D with N = (active) params and D = tokens processed by
+the step (decode: batch * 1 token). The MODEL/HLO ratio flags remat or
+redundant-compute waste (>1x) and, for FL train steps, the extra local
+iterations.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def model_flops(cfg, case, local_steps: int = 1, fl_clients: int = 0) -> float:
+    n = cfg.active_param_count()
+    if case.kind == "train":
+        tokens = case.global_batch * case.seq_len
+        # fwd+bwd = 3x fwd pairs -> classic 6ND; FL runs I local steps
+        return 6.0 * n * tokens * max(local_steps, 1)
+    if case.kind == "prefill":
+        tokens = case.global_batch * case.seq_len
+        return 2.0 * n * tokens
+    tokens = case.global_batch * 1
+    return 2.0 * n * tokens
+
+
+def roofline_terms(rec: Dict) -> Optional[Dict]:
+    """cost_analysis numbers are PER-DEVICE on an SPMD program, so the
+    terms divide by per-chip peaks directly. Records from --exact-cost
+    runs (scan_unroll) are authoritative; non-exact records undercount
+    scanned-layer work (see DESIGN.md §10)."""
+    if rec.get("status") != "OK":
+        return None
+    chips = rec["n_devices"]
+    compute_s = rec["flops"] / PEAK_FLOPS
+    memory_s = rec["bytes_accessed"] / HBM_BW
+    # collective instructions in the SPMD program carry per-device shard
+    # shapes; the ring model in modeled_link_bytes is already per-device
+    collective_s = rec["modeled_link_bytes"] / LINK_BW
+    dom = max(("compute", compute_s), ("memory", memory_s),
+              ("collective", collective_s), key=lambda kv: kv[1])
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dom[0],
+        "dominant_s": dom[1],
+        "bound_fraction": dom[1] / max(compute_s, 1e-30),
+    }
+
+
+def load_records(path: str) -> List[Dict]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line.startswith("{"):
+                out.append(json.loads(line))
+    return out
+
+
+def table(path: str, local_steps: int = 1) -> List[Dict]:
+    """Joined dry-run + roofline + model-FLOPs table."""
+    from repro.configs import get_config
+    from repro.launch.specs import INPUT_SHAPES
+
+    rows = []
+    for rec in load_records(path):
+        row = dict(rec)
+        terms = roofline_terms(rec)
+        if terms:
+            row.update(terms)
+            cfg = get_config(rec["arch"])
+            case = INPUT_SHAPES[rec["shape"]]
+            fl = rec["mesh"].count("x") == 2 and case.kind == "train"
+            mf = model_flops(cfg, case,
+                             local_steps=local_steps if fl else 1)
+            row["model_flops"] = mf
+            global_flops = rec["flops"] * rec["n_devices"]
+            row["useful_ratio"] = mf / global_flops if global_flops > 0 else 0
+        rows.append(row)
+    return rows
+
+
+def main(path="dryrun_production.jsonl"):
+    print("arch,shape,mesh,status,compute_s,memory_s,collective_s,dominant,"
+          "model_flops,hlo_flops,useful_ratio")
+    for row in table(path):
+        if row.get("status") != "OK":
+            print(f"{row['arch']},{row['shape']},{row.get('mesh','-')},"
+                  f"{row['status']},,,,,,,")
+            continue
+        print(f"{row['arch']},{row['shape']},{row['mesh']},OK,"
+              f"{row['compute_s']:.4e},{row['memory_s']:.4e},"
+              f"{row['collective_s']:.4e},{row['dominant']},"
+              f"{row['model_flops']:.3e},{row['flops']:.3e},"
+              f"{row['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(*sys.argv[1:])

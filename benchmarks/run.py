@@ -1,0 +1,219 @@
+"""Benchmark harness — one entry per paper figure + roofline + kernels.
+
+``python -m benchmarks.run``            — default profile (single-core CPU
+                                          budget: reduced rounds, see
+                                          benchmarks/figures.py)
+``python -m benchmarks.run --smoke``    — minutes-scale CI check
+``python -m benchmarks.run --full``     — paper-scale (hours on this host)
+``python -m benchmarks.run --only fig5_power,kernels``
+
+Output: ``name,us_per_call,derived`` CSV lines per the repo convention,
+plus per-figure JSON dumps under benchmarks/out/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "out")
+
+
+def _emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def _dump(name: str, obj):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(obj, f, default=lambda o: np.asarray(o).tolist())
+
+
+# ----------------------------------------------------------- figure benches
+
+def bench_fig2_cifar(prof):
+    """Fig. 2: CIFAR-10 time-to-accuracy, proposed vs M-matched uniform."""
+    from benchmarks.figures import run_policy
+    from repro.fl.simulation import time_to_accuracy
+
+    results = {}
+    for lam in (10.0, 100.0):
+        for policy in ("proposed", "uniform"):
+            t0 = time.time()
+            h = run_policy("cifar10", "heterogeneous", lam, policy, prof)
+            wall = time.time() - t0
+            key = f"lam{int(lam)}_{policy}"
+            results[key] = h
+            target = 0.9 * float(max(h["test_acc"]))
+            tta = time_to_accuracy(h, target)
+            _emit(f"fig2_cifar_{key}", wall * 1e6 / prof.rounds,
+                  f"acc={h['test_acc'][-1]:.3f};comm_s={h['comm_time'][-1]:.1f};"
+                  f"tta90={tta if tta else 'NA'}")
+    for lam in (10, 100):
+        p = results[f"lam{lam}_proposed"]["comm_time"][-1]
+        u = results[f"lam{lam}_uniform"]["comm_time"][-1]
+        _emit(f"fig2_cifar_comm_saving_lam{lam}", 0.0,
+              f"proposed/uniform_comm_time={p / u:.3f}")
+    _dump("fig2_cifar", results)
+    return results
+
+
+def bench_fig3_lambda(prof, fig2=None):
+    """Fig. 3: per-round convergence slows as lambda grows (fewer devices)."""
+    from benchmarks.figures import run_policy
+
+    fig2 = fig2 or {}
+    results = {}
+    for lam in (10.0, 100.0):
+        key = f"lam{int(lam)}_proposed"
+        h = fig2.get(key)
+        if h is None:
+            h = run_policy("cifar10", "heterogeneous", lam, "proposed", prof)
+        results[f"lam{int(lam)}"] = h
+        # accuracy at the same ROUND index (not time)
+        _emit(f"fig3_lambda{int(lam)}", 0.0,
+              f"acc_final={h['test_acc'][-1]:.3f};"
+              f"mean_selected={np.mean(h['n_selected']):.2f}")
+    _dump("fig3_lambda", results)
+    return results
+
+
+def bench_fig4_femnist(prof):
+    """Fig. 4: FEMNIST (non-iid writers), heterogeneous channels."""
+    from benchmarks.figures import run_policy
+    from repro.fl.simulation import time_to_accuracy
+
+    results = {}
+    for lam in (10.0, 100.0):
+        for policy in ("proposed", "uniform"):
+            t0 = time.time()
+            h = run_policy("femnist", "heterogeneous", lam, policy, prof)
+            wall = time.time() - t0
+            key = f"lam{int(lam)}_{policy}"
+            results[key] = h
+            _emit(f"fig4_femnist_{key}", wall * 1e6 / prof.rounds,
+                  f"acc={h['test_acc'][-1]:.3f};"
+                  f"comm_s={h['comm_time'][-1]:.1f}")
+    for lam in (10, 100):
+        p = results[f"lam{lam}_proposed"]["comm_time"][-1]
+        u = results[f"lam{lam}_uniform"]["comm_time"][-1]
+        _emit(f"fig4_femnist_comm_saving_lam{lam}", 0.0,
+              f"proposed/uniform_comm_time={p / u:.3f}")
+    _dump("fig4_femnist", results)
+    return results
+
+
+def bench_fig5_power(prof):
+    """Fig. 5: larger V -> slower convergence to the power constraint."""
+    from benchmarks.figures import power_trajectory
+
+    rounds = max(200, prof.rounds * 4)
+    results = {}
+    for v in (1.0, 1e3, 1e5):
+        t0 = time.time()
+        traj = power_trajectory(v, rounds=rounds)
+        wall = time.time() - t0
+        results[f"V{v:g}"] = traj
+        # rounds until time-average power <= 1.05 * Pbar (Pbar = 1)
+        ok = np.nonzero(traj <= 1.05)[0]
+        tconv = int(ok[0]) if ok.size else -1
+        _emit(f"fig5_power_V{v:g}", wall * 1e6 / rounds,
+              f"rounds_to_constraint={tconv};final_avg_power={traj[-1]:.3f}")
+    _dump("fig5_power", results)
+    return results
+
+
+# ---------------------------------------------------------------- roofline
+
+def bench_roofline(prof):
+    """Summaries from the production dry-run records, if present."""
+    from benchmarks.roofline import load_records, roofline_terms
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "dryrun_production.jsonl")
+    if not os.path.exists(path):
+        _emit("roofline", 0.0, "dryrun_production.jsonl missing (run "
+              "python -m repro.launch.dryrun)")
+        return
+    recs = load_records(path)
+    ok = [r for r in recs if r.get("status") == "OK"]
+    doms = {}
+    for r in ok:
+        t = roofline_terms(r)
+        doms[t["dominant"]] = doms.get(t["dominant"], 0) + 1
+        _emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
+              f"compute={t['compute_s']:.3e};memory={t['memory_s']:.3e};"
+              f"collective={t['collective_s']:.3e};dom={t['dominant']}")
+    _emit("roofline_summary", 0.0,
+          f"ok={len(ok)};skip={sum(1 for r in recs if 'SKIP' in r['status'])};"
+          f"dominants={doms}")
+
+
+# ------------------------------------------------------------------ kernels
+
+def bench_kernels(prof):
+    """us/call for the paper-core scheduler solve (jnp path) and oracles."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import ChannelConfig, SchedulerConfig
+    from repro.core.scheduler import solve_round
+
+    for n in (100, 3597, 100_000):
+        ch = ChannelConfig(n_clients=n)
+        cfg = SchedulerConfig(n_clients=n, model_bits=32 * 555178.0)
+        gains = jnp.exp(jax.random.normal(jax.random.PRNGKey(0), (n,)))
+        z = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (n,)))
+        f = jax.jit(lambda g, z: solve_round(g, z, cfg, ch))
+        jax.block_until_ready(f(gains, z))
+        t0 = time.time()
+        iters = 50
+        for _ in range(iters):
+            jax.block_until_ready(f(gains, z))
+        us = (time.time() - t0) / iters * 1e6
+        _emit(f"kernel_scheduler_solve_n{n}", us,
+              f"per_client_ns={us * 1000 / n:.1f}")
+
+
+BENCHES = {
+    "fig2_cifar": bench_fig2_cifar,
+    "fig3_lambda": bench_fig3_lambda,
+    "fig4_femnist": bench_fig4_femnist,
+    "fig5_power": bench_fig5_power,
+    "roofline": bench_roofline,
+    "kernels": bench_kernels,
+}
+
+
+def main(argv=None):
+    from benchmarks.figures import FULL, SMOKE, BenchProfile
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args(argv)
+    prof = SMOKE if args.smoke else (FULL if args.full else BenchProfile())
+
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    fig2 = None
+    for name, fn in BENCHES.items():
+        if only and name not in only:
+            continue
+        try:
+            if name == "fig3_lambda":
+                fn(prof, fig2)
+            elif name == "fig2_cifar":
+                fig2 = fn(prof)
+            else:
+                fn(prof)
+        except Exception as e:  # noqa: BLE001
+            _emit(name, -1.0, f"ERROR:{e!r}")
+
+
+if __name__ == "__main__":
+    main()

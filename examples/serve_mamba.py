@@ -1,0 +1,20 @@
+"""Serving example: batched prefill + decode on a reduced mamba2 (SSM state,
+O(1) per token) and a reduced mixtral (MoE + sliding-window rolling cache).
+
+    PYTHONPATH=src python examples/serve_mamba.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    print("== mamba2-130m (reduced): recurrent SSM decode ==")
+    serve_main(["--arch", "mamba2-130m", "--batch", "2", "--prompt-len",
+                "32", "--gen", "16"])
+    print("\n== mixtral-8x22b (reduced): MoE + sliding-window cache ==")
+    serve_main(["--arch", "mixtral-8x22b", "--batch", "2", "--prompt-len",
+                "32", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

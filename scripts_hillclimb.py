@@ -1,0 +1,15 @@
+"""§Perf hillclimbs: three (arch x shape) pairs, hypothesis -> change ->
+re-lower -> validate. Emits one JSON record per (pair, variant)."""
+import sys
+sys.argv = ["x"]
+from repro.launch.dryrun import probe_case
+
+# H1 worst-roofline-fraction: minicpm prefill (memory 617s vs compute 17s)
+probe_case("minicpm-2b", "prefill_32k", False, attn_bf16=True)
+
+# H2 most collective-bound: granite decode (collective 0.19s vs compute 0.3ms)
+probe_case("granite-20b", "decode_32k", False, fsdp=False)
+
+# H3 paper-representative: kimi multi-pod FL train
+probe_case("kimi-k2-1t-a32b", "train_4k", True, aggregation="paper")        # baseline
+probe_case("kimi-k2-1t-a32b", "train_4k", True, aggregation="delta_bf16")   # iter 1

@@ -1,0 +1,15 @@
+"""§Perf hillclimb iteration 2 (after three refuted/confounded iter-1 runs)."""
+import sys
+sys.argv = ["x"]
+from repro.launch.dryrun import probe_case
+
+# H1 iter2: fused fp32 softmax, bf16 stored probs only
+probe_case("minicpm-2b", "prefill_32k", False, attn_bf16=True)
+
+# H2 iter2: KV cache slot-dim sharding (new default in serve_state_pspecs)
+probe_case("granite-20b", "decode_32k", False)
+
+# H3 iter2: true-bf16-wire delta aggregation (+ a remat variant for memory)
+probe_case("kimi-k2-1t-a32b", "train_4k", True, aggregation="delta_bf16")
+probe_case("kimi-k2-1t-a32b", "train_4k", True, aggregation="delta_bf16",
+           remat=True)

@@ -1,0 +1,9 @@
+import sys
+sys.argv = ["x"]
+from repro.launch.dryrun import probe_case, probe_case_seq
+
+for arch in ("mamba2-130m", "jamba-v0.1-52b"):
+    probe_case_seq(arch, "train_4k")
+    probe_case_seq(arch, "prefill_32k")
+    probe_case(arch, "decode_32k", False)
+    probe_case(arch, "long_500k", False)

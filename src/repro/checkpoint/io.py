@@ -1,0 +1,53 @@
+"""Checkpointing: flattened-key npz snapshots of arbitrary pytrees.
+
+Keys are '/'-joined tree paths so any nested dict/list/tuple/NamedTuple of
+arrays round-trips against a matching *template* pytree (restore is
+structure-driven, so sharded trees restore onto whatever sharding the
+template's arrays carry — host-local in this container).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", getattr(e, "name", e))))
+                       for e in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz cannot store bf16; f32 is lossless
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load_pytree(path: str, template: PyTree) -> PyTree:
+    with np.load(path) as data:
+        flat = dict(data)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in paths:
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", getattr(e, "name", e))))
+                       for e in p)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf '{key}'")
+        arr = flat[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch for '{key}': "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)

@@ -1,0 +1,50 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full-size ModelConfig; every config also
+has ``reduced()`` for CPU smoke tests. ``ARCH_IDS`` lists the 10 assigned
+architectures (paper-external pool); the paper's own CNN experiment configs
+live in cifar10_cnn.py / femnist_cnn.py.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = [
+    "mamba2-130m",
+    "jamba-v0.1-52b",
+    "chatglm3-6b",
+    "llama-3.2-vision-11b",
+    "kimi-k2-1t-a32b",
+    "yi-6b",
+    "mixtral-8x22b",
+    "granite-20b",
+    "minicpm-2b",
+    "seamless-m4t-large-v2",
+]
+
+_MODULES = {
+    "mamba2-130m": "mamba2_130m",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "chatglm3-6b": "chatglm3_6b",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t",
+    "yi-6b": "yi_6b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "granite-20b": "granite_20b",
+    "minicpm-2b": "minicpm_2b",
+    "seamless-m4t-large-v2": "seamless_m4t_v2",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch '{name}'; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {name: get_config(name) for name in ARCH_IDS}

@@ -1,0 +1,24 @@
+"""Paper core: convergence bound, wireless channel model, Algorithm-2 scheduler."""
+
+from repro.core.bound import (BoundAccumulator, BoundConstants, accumulate,
+                              corollary1_bound, init_accumulator,
+                              sampling_term_per_round)
+from repro.core.channel import (ChannelConfig, channel_rate, draw_gains,
+                                expected_uplink_time, heterogeneous_sigmas,
+                                homogeneous_sigmas, uplink_time)
+from repro.core.lambertw import lambertw0
+from repro.core.scheduler import (SchedulerConfig, SchedulerState,
+                                  estimate_avg_selected, init_state,
+                                  sample_selection, schedule_step, solve_round,
+                                  uniform_selection, update_queues, y0)
+
+__all__ = [
+    "BoundAccumulator", "BoundConstants", "accumulate", "corollary1_bound",
+    "init_accumulator", "sampling_term_per_round",
+    "ChannelConfig", "channel_rate", "draw_gains", "expected_uplink_time",
+    "heterogeneous_sigmas", "homogeneous_sigmas", "uplink_time",
+    "lambertw0",
+    "SchedulerConfig", "SchedulerState", "estimate_avg_selected", "init_state",
+    "sample_selection", "schedule_step", "solve_round", "uniform_selection",
+    "update_queues", "y0",
+]

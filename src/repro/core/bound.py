@@ -1,0 +1,63 @@
+"""Convergence-bound bookkeeping (Theorem 1 / Corollary 1).
+
+Corollary 1:  (1/T) sum_t E||grad f(x_t)||^2
+    <=   2 (f(x0) - f*) / (gamma T I)                      [init term]
+       + gamma^2 L^2 (I-1)^2 G^2                           [drift term]
+       + (gamma L I G^2 / (T N)) sum_t sum_n 1/q_n^t       [sampling term]
+
+The sampling term is the one the scheduler controls; the runtime accumulates
+sum_n 1/q_n^t each round so the realized bound can be reported next to the
+realized gradient norms (benchmarks + property tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundConstants:
+    """Problem constants of Assumptions 1-3 (estimated or configured)."""
+
+    gamma: float          # learning rate
+    L: float              # smoothness
+    G2: float             # gradient second-moment bound G^2
+    I: int                # local steps per round
+    n_clients: int
+
+
+class BoundAccumulator(NamedTuple):
+    """Streaming accumulator for the q-dependent term."""
+
+    inv_q_sum: jax.Array   # running sum_t sum_n 1/q_n^t
+    rounds: jax.Array      # t so far
+
+
+def init_accumulator() -> BoundAccumulator:
+    return BoundAccumulator(inv_q_sum=jnp.zeros((), jnp.float32),
+                            rounds=jnp.zeros((), jnp.int32))
+
+
+def accumulate(acc: BoundAccumulator, q: jax.Array) -> BoundAccumulator:
+    return BoundAccumulator(inv_q_sum=acc.inv_q_sum + jnp.sum(1.0 / q),
+                            rounds=acc.rounds + 1)
+
+
+def corollary1_bound(acc: BoundAccumulator, c: BoundConstants,
+                     f0_minus_fstar: jax.Array) -> jax.Array:
+    """Evaluate the Corollary-1 right-hand side at the current round count."""
+    t = jnp.maximum(acc.rounds.astype(jnp.float32), 1.0)
+    init_term = 2.0 * f0_minus_fstar / (c.gamma * t * c.I)
+    drift_term = (c.gamma ** 2) * (c.L ** 2) * ((c.I - 1) ** 2) * c.G2
+    samp_term = (c.gamma * c.L * c.I * c.G2 / (t * c.n_clients)) * acc.inv_q_sum
+    return init_term + drift_term + samp_term
+
+
+def sampling_term_per_round(q: jax.Array, c: BoundConstants) -> jax.Array:
+    """Instantaneous contribution gamma L I G^2 / N * sum_n 1/q_n — the
+    quantity Algorithm 2's objective trades off against communication time."""
+    return c.gamma * c.L * c.I * c.G2 / c.n_clients * jnp.sum(1.0 / q)

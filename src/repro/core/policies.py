@@ -1,0 +1,53 @@
+"""Additional selection-policy baselines (beyond the paper's uniform).
+
+The paper compares Algorithm 2 against M-matched uniform selection only.
+These two standard baselines from the client-selection literature make the
+comparison richer (examples + benches use them):
+
+* ``greedy_channel`` — pick the top-M instantaneous channels each round
+  (Nishio & Yonetani [14]-style resource-greedy selection). Fast per round
+  but BIASED: clients with persistently bad channels never participate, so
+  with non-iid data the global model drifts (no 1/q correction exists
+  because q=0 for some clients — exactly the failure mode Theorem 1's
+  non-zero-q condition rules out).
+* ``proportional_gain`` — sample with probability proportional to the
+  clipped gain (normalized to match a target average M), with the
+  Algorithm-1 1/q weighting still applicable since q > 0 for everyone.
+
+Both use P_n = Pbar * N / M' like the paper's uniform baseline, satisfying
+the average-power constraint by construction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import ChannelConfig
+
+
+def greedy_channel(key, gains: jax.Array, m: int, ch: ChannelConfig):
+    """Select the top-m channels. Returns (selected, q, P).
+
+    q is reported as the *realized* indicator (there is no valid inverse-
+    propensity weight for never-selected clients; aggregation must fall
+    back to plain averaging over participants — biased under non-iid)."""
+    n = gains.shape[0]
+    thresh = -jnp.sort(-gains)[m - 1]
+    sel = gains >= thresh
+    q = sel.astype(jnp.float32)  # degenerate: q in {0,1}
+    p = jnp.full((n,), ch.p_bar * n / jnp.maximum(m, 1), jnp.float32)
+    return sel, q, p
+
+
+def proportional_gain(key, gains: jax.Array, m_avg: float,
+                      ch: ChannelConfig, q_floor: float = 1e-3):
+    """Bernoulli selection with q_n proportional to |h_n|^2, scaled so
+    E[sum q] = m_avg, floored at q_floor (keeps Theorem 1 applicable)."""
+    n = gains.shape[0]
+    q = gains / jnp.sum(gains) * m_avg
+    q = jnp.clip(q, q_floor, 1.0)
+    sel = jax.random.uniform(key, (n,)) < q
+    m_draw = jnp.maximum(jnp.sum(sel), 1)
+    p = jnp.full((n,), ch.p_bar * n / m_draw, jnp.float32)
+    return sel, q, p

@@ -1,0 +1,212 @@
+"""Algorithm 2: Lyapunov drift-plus-penalty client scheduling (the paper's core).
+
+Per round t and per client n, the Min Drift-Plus-Penalty problem (Eq. 15)
+
+    min_{q, P}  V * ( 1/(N q) + lam * ell * q / (B log2(1 + |h|^2 P / N0)) )
+                + Z * (P q - Pbar)
+    s.t. 0 <= P <= Pmax,  q in (0, 1]
+
+separates over clients and has a closed-form interior solution (Theorem 2):
+
+    A      = V lam ell |h|^2 (ln 2)^2 / (N0 B Z)
+    P_opt  = N0/|h|^2 * ( (A/4) * W0(sqrt(A/4))^{-2} - 1 )            (Eq. 16)
+    q_opt  = ( lam ell N / (B log2(1+|h|^2 P_opt/N0)) + (N/V) Z P_opt )^{-1/2}
+                                                                       (Eq. 17)
+
+with the boundary fallback P = Pmax, q = min{Eq.17(Pmax), 1}. Instead of the
+paper's Hessian determinant test we evaluate the per-client objective at both
+candidates and keep the smaller — equivalent selection of the minimizer, and
+branch-free (jit/vmap friendly).
+
+Virtual power queues follow Eq. (9): Z(t+1) = max(Z + P q - Pbar, 0).
+
+Only instantaneous CSI (|h_n(t)|^2) is consumed — no channel statistics — and
+the per-client solve is local, mirroring the paper's distributed computation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import ChannelConfig, channel_rate
+from repro.core.lambertw import lambertw0
+
+_LN2 = 0.6931471805599453
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Hyper-parameters of Algorithm 2."""
+
+    n_clients: int
+    model_bits: float                   # ell: bits per model transmission
+    lam: float = 10.0                   # lambda: comm-time vs bound trade-off
+    V: float = 1000.0                   # Lyapunov penalty weight
+    q_floor: float = 1e-5               # numerical floor to keep q in (0,1]
+    guarantee_one: bool = True          # force >=1 participant per round (paper VI)
+
+
+class SchedulerState(NamedTuple):
+    """Carried across rounds; Z are the per-client virtual power queues."""
+
+    z: jax.Array         # (N,) virtual queues
+    t: jax.Array         # round counter (int32)
+
+
+def init_state(cfg: SchedulerConfig) -> SchedulerState:
+    return SchedulerState(z=jnp.zeros((cfg.n_clients,), jnp.float32),
+                          t=jnp.zeros((), jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Per-client closed-form solve.
+# --------------------------------------------------------------------------
+
+def _objective(q, p, gains, z, cfg: SchedulerConfig, ch: ChannelConfig):
+    """Per-client drift-plus-penalty objective f(q, P) of Eq. (15)."""
+    rate = channel_rate(gains, p, ch)
+    y0 = 1.0 / (cfg.n_clients * q) + cfg.lam * cfg.model_bits * q / jnp.maximum(rate, _EPS)
+    return cfg.V * y0 + z * (p * q - ch.p_bar)
+
+
+def _q_eq17(p, gains, z, cfg: SchedulerConfig, ch: ChannelConfig):
+    """Eq. (17) for a given power; clipped into (q_floor, 1]."""
+    rate = channel_rate(gains, p, ch)
+    inv_sq = (cfg.lam * cfg.model_bits * cfg.n_clients / jnp.maximum(rate, _EPS)
+              + cfg.n_clients / cfg.V * z * p)
+    q = jax.lax.rsqrt(jnp.maximum(inv_sq, _EPS))
+    return jnp.clip(q, cfg.q_floor, 1.0)
+
+
+def solve_round(gains: jax.Array, z: jax.Array, cfg: SchedulerConfig,
+                ch: ChannelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Vectorized Theorem-2 solve: gains, z of shape (N,) -> (q, P) each (N,).
+
+    Pure jnp (this is also the oracle for the Pallas `scheduler_solve` kernel).
+    """
+    gains = gains.astype(jnp.float32)
+    z = z.astype(jnp.float32)
+    zs = jnp.maximum(z, _EPS)  # Z=0 -> A=inf -> boundary branch wins anyway
+
+    # Interior candidate (Eq. 16). NOTE: the paper prints
+    # A = V lam ell |h|^2 (log 2)^2 / (N0 B Z); re-deriving d f / d P = 0
+    # gives x (ln x)^2 = V lam ell |h|^2 ln(2) / (N0 B Z) — one power of
+    # ln 2, not two. The grid-search property test
+    # (tests/test_scheduler.py::test_closed_form_beats_grid) confirms the
+    # corrected constant; the paper's version is ~0.5% suboptimal in f.
+    a = cfg.V * cfg.lam * cfg.model_bits * gains * _LN2 / (ch.noise_power
+                                                           * ch.bandwidth_hz * zs)
+    w = lambertw0(jnp.sqrt(a / 4.0))
+    p_int = ch.noise_power / gains * (a / (4.0 * jnp.maximum(w * w, _EPS)) - 1.0)
+    p_int = jnp.clip(p_int, 0.0, ch.p_max)
+    q_int = _q_eq17(p_int, gains, z, cfg, ch)
+
+    # Boundary candidate: P = Pmax (also Algorithm 2's t=0 branch when Z=0).
+    p_bnd = jnp.full_like(gains, ch.p_max)
+    q_bnd = _q_eq17(p_bnd, gains, z, cfg, ch)
+
+    # Keep the smaller objective (replaces the Hessian determinant test).
+    f_int = _objective(q_int, p_int, gains, z, cfg, ch)
+    f_bnd = _objective(q_bnd, p_bnd, gains, z, cfg, ch)
+    use_int = jnp.isfinite(f_int) & (f_int <= f_bnd)
+    q = jnp.where(use_int, q_int, q_bnd)
+    p = jnp.where(use_int, p_int, p_bnd)
+    return q, p
+
+
+def update_queues(state: SchedulerState, q: jax.Array, p: jax.Array,
+                  ch: ChannelConfig) -> SchedulerState:
+    """Eq. (9): Z(t+1) = max(Z + P q - Pbar, 0)."""
+    z = jnp.maximum(state.z + p * q - ch.p_bar, 0.0)
+    return SchedulerState(z=z, t=state.t + 1)
+
+
+def sample_selection(key: jax.Array, q: jax.Array,
+                     guarantee_one: bool = True) -> jax.Array:
+    """Draw the participation indicators I_n ~ Bernoulli(q_n), independently.
+
+    If nothing was drawn and ``guarantee_one``, the client with the largest q
+    is selected (paper Section VI's fallback).
+    """
+    sel = (jax.random.uniform(key, q.shape) < q)
+    if guarantee_one:
+        none = ~jnp.any(sel)
+        forced = jnp.zeros_like(sel).at[jnp.argmax(q)].set(True)
+        sel = jnp.where(none, forced, sel)
+    return sel
+
+
+def schedule_step(key: jax.Array, gains: jax.Array, state: SchedulerState,
+                  cfg: SchedulerConfig, ch: ChannelConfig):
+    """One full Algorithm-2 round: solve -> sample -> queue update.
+
+    Returns (selected mask, q, P, new_state). jit-able; vmapped internally
+    over all clients via the vectorized closed form.
+    """
+    q, p = solve_round(gains, state.z, cfg, ch)
+    sel = sample_selection(key, q, cfg.guarantee_one)
+    new_state = update_queues(state, q, p, ch)
+    return sel, q, p, new_state
+
+
+# --------------------------------------------------------------------------
+# Baselines.
+# --------------------------------------------------------------------------
+
+def uniform_selection(key: jax.Array, n_clients: int, m_avg: float,
+                      ch: ChannelConfig):
+    """FedAvg's uniform policy, strengthened as in the paper's Section VI.
+
+    Selects floor(M) or ceil(M) clients uniformly at random (probability set so
+    the mean is M), and allocates P_n = Pbar * N / M' to satisfy the average
+    power constraint by design. Returns (selected, q, P).
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    m_lo = jnp.floor(m_avg).astype(jnp.int32)
+    take_hi = jax.random.uniform(k1) < (m_avg - jnp.floor(m_avg))
+    m = jnp.where(take_hi, m_lo + 1, m_lo)
+    m = jnp.maximum(m, 1)
+    # Uniform subset of size m via random scores.
+    scores = jax.random.uniform(k2, (n_clients,))
+    thresh = -jnp.sort(-scores)[m - 1]
+    sel = scores >= thresh
+    q = jnp.full((n_clients,), jnp.minimum(m_avg / n_clients, 1.0), jnp.float32)
+    p = jnp.full((n_clients,), ch.p_bar * n_clients / jnp.maximum(m, 1), jnp.float32)
+    del k3
+    return sel, q, p
+
+
+def estimate_avg_selected(key: jax.Array, sigmas: jax.Array, cfg: SchedulerConfig,
+                          ch: ChannelConfig, rounds: int = 500) -> jax.Array:
+    """Monte-Carlo estimate of M = E[sum_n q_n] under Algorithm 2.
+
+    Used to match the uniform baseline's participation level (Section VI).
+    Runs the real queue dynamics so the estimate reflects steady state.
+    """
+    from repro.core.channel import draw_gains  # local import to avoid cycle
+
+    def body(carry, k):
+        st = carry
+        gains = draw_gains(k, sigmas, ch)
+        q, p = solve_round(gains, st.z, cfg, ch)
+        st = update_queues(st, q, p, ch)
+        return st, jnp.sum(q)
+
+    keys = jax.random.split(key, rounds)
+    _, sums = jax.lax.scan(body, init_state(cfg), keys)
+    # Discard burn-in (first 20%) — queues start at 0.
+    burn = rounds // 5
+    return jnp.mean(sums[burn:])
+
+
+def y0(q: jax.Array, p: jax.Array, gains: jax.Array, cfg: SchedulerConfig,
+       ch: ChannelConfig) -> jax.Array:
+    """The scheduling objective y0(t) of Eq. (8) — diagnostics/benchmarks."""
+    rate = channel_rate(gains, p, ch)
+    return jnp.sum(1.0 / (cfg.n_clients * jnp.maximum(q, _EPS))
+                   + cfg.lam * cfg.model_bits * q / jnp.maximum(rate, _EPS))

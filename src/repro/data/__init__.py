@@ -1,0 +1,5 @@
+from repro.data.synthetic import (FederatedDataset, make_cifar10_like,
+                                  make_femnist_like, make_token_stream)
+
+__all__ = ["FederatedDataset", "make_cifar10_like", "make_femnist_like",
+           "make_token_stream"]

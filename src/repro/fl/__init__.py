@@ -1,0 +1,5 @@
+from repro.fl.round import (fl_round, local_sgd, make_fl_train_step,
+                            make_train_step, weighted_aggregate)
+
+__all__ = ["fl_round", "local_sgd", "make_fl_train_step", "make_train_step",
+           "weighted_aggregate"]

@@ -1,0 +1,164 @@
+"""End-to-end wireless-FL simulation — the engine behind Figs. 2-5.
+
+Couples all the substrates: Rayleigh channel draws -> Algorithm-2 scheduling
+(or the M-matched uniform baseline) -> Algorithm-1 federated round on the
+paper's CNN -> TDMA communication-time accounting. Computation time is
+excluded from the clock, as in Section VI ("we assume that the computation
+time is much less than communication time").
+
+Memory note: only up to ``m_cap`` sampled participants are simulated per
+round (Algorithm 1's aggregation takes zero contribution from everyone
+else), so N=3597 FEMNIST clients never materialize 3597 model replicas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ChannelConfig, SchedulerConfig, channel_rate,
+                        draw_gains, estimate_avg_selected, init_state,
+                        sample_selection, schedule_step, solve_round,
+                        uniform_selection, update_queues)
+from repro.data.synthetic import FederatedDataset
+from repro.fl.round import local_sgd
+from repro.models.cnn import apply_cnn, cnn_loss
+
+
+@dataclasses.dataclass
+class SimConfig:
+    rounds: int = 200
+    gamma: float = 0.01          # paper: 0.01
+    local_steps: int = 10        # I
+    batch: int = 32
+    m_cap: int = 32              # max simulated participants per round
+    eval_every: int = 10
+    eval_size: int = 2000
+    policy: str = "proposed"     # proposed | uniform
+    aggregation: str = "paper"   # paper (Alg.1 l.7) | delta (variance-reduced)
+    uniform_m: float = 0.0       # matched M for the uniform baseline
+    seed: int = 0
+
+
+def _select_proposed(key, gains, sched_state, scfg, ch):
+    sel, q, p, new_state = schedule_step(key, gains, sched_state, scfg, ch)
+    return sel, q, p, new_state
+
+
+def _round_update(params, sel_idx, sel_valid, q_sel, batches, gamma, steps,
+                  n_clients, aggregation="paper"):
+    """Aggregate x <- (1/N) sum_{i in sel} (1/q_i) y_i over <= m_cap clients
+    (paper), or the variance-reduced delta form x + (1/N) sum (1/q)(y - x).
+
+    Clients are iterated with lax.map (sequential) rather than vmap: vmapping
+    convolutions over per-client weights lowers to grouped convolutions,
+    which hit a ~30x slow path on XLA:CPU. Sequential keeps every conv on
+    the fast kernel; on TPU the FL pod path uses vmap (repro/fl/round.py).
+    """
+    updated = jax.lax.map(
+        lambda b: local_sgd(cnn_loss, params, b, gamma, steps), batches)
+    w = sel_valid.astype(jnp.float32) / jnp.maximum(q_sel, 1e-9) / n_clients
+
+    if aggregation == "delta":
+        def agg(x, y):
+            wf = w.reshape((-1,) + (1,) * (y.ndim - 1))
+            delta = y.astype(jnp.float32) - x.astype(jnp.float32)[None]
+            return x.astype(jnp.float32) + jnp.sum(delta * wf, axis=0)
+
+        return jax.tree.map(agg, params, updated)
+
+    def agg(y):
+        wf = w.reshape((-1,) + (1,) * (y.ndim - 1))
+        return jnp.sum(y.astype(jnp.float32) * wf, axis=0)
+
+    return jax.tree.map(agg, updated)
+
+
+def run_simulation(key, params, ds: FederatedDataset, sim: SimConfig,
+                   scfg: SchedulerConfig, ch: ChannelConfig,
+                   sigmas: jax.Array) -> Dict[str, np.ndarray]:
+    """Returns history dict: comm_time (cumulative s), test_acc, loss,
+    avg_power (per-round E[P q]), n_selected."""
+    n = ds.n_clients
+    m_cap = sim.m_cap
+    sched_state = init_state(scfg)
+    # sim_round donates its params buffer; copy so callers keep theirs.
+    params = jax.tree.map(jnp.array, params)
+
+    @jax.jit
+    def eval_acc(params, imgs, labels):
+        logits = apply_cnn(params, imgs)
+        return jnp.mean(jnp.argmax(logits, -1) == labels)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def sim_round(params, sched_state, key):
+        k_ch, k_sel, k_bat = jax.random.split(key, 3)
+        gains = draw_gains(k_ch, sigmas, ch)
+        if sim.policy == "proposed":
+            sel, q, p, sched_state = _select_proposed(k_sel, gains,
+                                                      sched_state, scfg, ch)
+        else:
+            sel, q, p = uniform_selection(k_sel, n, sim.uniform_m, ch)
+        # --- comm time: TDMA sum over selected (Eq. 8 denominator) ---
+        rate = channel_rate(gains, p, ch)
+        t_comm = jnp.sum(jnp.where(sel, scfg.model_bits
+                                   / jnp.maximum(rate, 1e-9), 0.0))
+        power = jnp.sum(p * q)  # sum_n E[P_n q_n] this round
+        # --- pick up to m_cap participants ---
+        sel_idx = jnp.nonzero(sel, size=m_cap, fill_value=0)[0]
+        sel_valid = jnp.arange(m_cap) < jnp.sum(sel)  # nonzero packs left
+        q_sel = q[sel_idx]
+        # --- local minibatches for the participants ---
+        per_client = ds.client_labels.shape[1]
+        idx = jax.random.randint(
+            k_bat, (m_cap, sim.local_steps, sim.batch), 0, per_client)
+        imgs = ds.client_images[sel_idx[:, None, None], idx]
+        labs = ds.client_labels[sel_idx[:, None, None], idx]
+        new_params = _round_update(params, sel_idx, sel_valid, q_sel,
+                                   (imgs, labs), sim.gamma, sim.local_steps,
+                                   n, sim.aggregation)
+        return new_params, sched_state, t_comm, power, jnp.sum(sel)
+
+    hist: Dict[str, List] = {"round": [], "comm_time": [], "test_acc": [],
+                             "avg_power": [], "n_selected": []}
+    t_cum = 0.0
+    power_cum = 0.0
+    key_loop = key
+    ev_imgs = ds.test_images[: sim.eval_size]
+    ev_labels = ds.test_labels[: sim.eval_size]
+    for r in range(sim.rounds):
+        key_loop, k = jax.random.split(key_loop)
+        params, sched_state, t_comm, power, nsel = sim_round(
+            params, sched_state, k)
+        t_cum += float(t_comm)
+        power_cum += float(power)
+        if r % sim.eval_every == 0 or r == sim.rounds - 1:
+            acc = float(eval_acc(params, ev_imgs, ev_labels))
+            hist["round"].append(r)
+            hist["comm_time"].append(t_cum)
+            hist["test_acc"].append(acc)
+            hist["avg_power"].append(power_cum / (r + 1) / n)
+            hist["n_selected"].append(int(nsel))
+    return {k: np.asarray(v) for k, v in hist.items()}
+
+
+def match_uniform_m(key, sigmas, scfg: SchedulerConfig, ch: ChannelConfig,
+                    rounds: int = 300) -> float:
+    """Estimate Algorithm 2's average participation M to configure the
+    M-matched uniform baseline (paper Section VI's strong benchmark)."""
+    return float(estimate_avg_selected(key, sigmas, scfg, ch, rounds))
+
+
+def time_to_accuracy(hist: Dict[str, np.ndarray], target: float
+                     ) -> Optional[float]:
+    """First cumulative comm time at which test_acc >= target."""
+    idx = np.nonzero(hist["test_acc"] >= target)[0]
+    if idx.size == 0:
+        return None
+    return float(hist["comm_time"][idx[0]])

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Three kernels, each with a BlockSpec-tiled `pl.pallas_call` implementation,
+a jit'd wrapper in ops.py, and a pure-jnp oracle in ref.py:
+
+* ``scheduler_solve`` — the paper's Theorem-2 per-client closed form
+  (Lambert-W power + Eq.17 probability), tiled over the client vector.
+* ``flash_attention`` — online-softmax attention with VMEM scratch
+  accumulators (used by 8 of the 10 assigned architectures).
+* ``ssd_scan`` — Mamba-2 chunked state-space-duality scan (mamba2, jamba).
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.scheduler_solve import scheduler_solve
+from repro.kernels.ssd_scan import ssd_scan
+
+__all__ = ["ops", "ref", "flash_attention_bhsd", "scheduler_solve",
+           "ssd_scan"]

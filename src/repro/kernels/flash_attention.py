@@ -1,0 +1,114 @@
+"""Flash attention (online softmax) Pallas TPU kernel.
+
+TPU-native adaptation: the grid is (batch*heads, q_blocks, k_blocks) with the
+k dimension innermost — TPU grids execute sequentially over the last axis, so
+the (m, l, acc) online-softmax statistics live in VMEM scratch and persist
+across k steps for a fixed q block. Block shapes are 128-aligned so the
+(bq, d) x (d, bk) score matmul and the (bq, bk) x (bk, d) value matmul both
+land on the MXU. HBM traffic is one pass over K/V per q block — the flash
+property — instead of materializing the (S, S) score matrix.
+
+Supports causal masking, sliding-window masking (Mixtral), and a k-length
+bound for padded sequences. GQA is handled in ops.py by expanding KV heads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale, block_q, block_k, n_k_blocks, causal, window, kv_len):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                    # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]                                  # (bq, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)                               # (bq, bk)
+    l_cur = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_cur
+    l_scr[...] = l_cur
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "block_q", "block_k", "interpret"))
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, window: int | None = None,
+                         scale: float | None = None, block_q: int = 128,
+                         block_k: int = 128, interpret: bool = True):
+    """Flash attention over flattened (BH, S, D) tensors.
+
+    q: (BH, Sq, D); k, v: (BH, Sk, D), already GQA-expanded. Sequences are
+    padded to block multiples internally; masking keeps padded keys inert.
+    """
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    if scale is None:
+        scale = float(d) ** -0.5
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    n_q = qp.shape[1] // block_q
+    n_k = kp.shape[1] // block_k
+    grid = (bh, n_q, n_k)
+
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, block_q=block_q,
+                          block_k=block_k, n_k_blocks=n_k, causal=causal,
+                          window=window, kv_len=sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, qp.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq, :]

@@ -1,0 +1,96 @@
+"""Mamba-2 SSD (state-space duality) chunked scan — Pallas TPU kernel.
+
+The SSD recurrence  h[t] = exp(dt[t] A) h[t-1] + dt[t] B[t] x[t],
+                    y[t] = C[t] . h[t]
+is computed in the chunked dual form (arXiv 2405.21060): within a chunk of
+length L everything is dense matmuls (MXU work), and only a (N, P) state
+carries between chunks. TPU adaptation: instead of the GPU warp-level scan,
+the grid is (batch, heads, chunks) with chunks innermost; the carried state
+lives in VMEM scratch and persists across sequential chunk steps — the
+inter-chunk recurrence costs one (L,N)x(N,P) matmul per chunk, no
+elementwise recurrence over time ever materializes.
+
+Shapes (ngroups=1, B/C shared across heads as in mamba2-130m):
+  x  (batch, S, H, P)   dt (batch, S, H)    A (H,) negative reals
+  Bm (batch, S, N)      Cm (batch, S, N)    ->  y (batch, S, H, P)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+                chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (L,)
+    a = a_ref[0].astype(jnp.float32)                 # scalar
+    bm = b_ref[0].astype(jnp.float32)                # (L, N)
+    cm = c_ref[0].astype(jnp.float32)                # (L, N)
+
+    g = dt * a                                       # (L,) log-decay, <= 0
+    lc = jnp.cumsum(g)                               # inclusive cumsum
+
+    # Intra-chunk: y_intra[t] = sum_{s<=t} (C_t.B_s) e^{lc_t - lc_s} dt_s x_s
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (L, L)
+    decay = lc[:, None] - lc[None, :]                # (L, L) t row, s col
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = s_idx <= t_idx
+    w = jnp.where(causal, jnp.exp(jnp.minimum(decay, 0.0)), 0.0)
+    m = scores * w * dt[None, :]                     # (L, L)
+    y = jax.lax.dot(m, x, preferred_element_type=jnp.float32)
+
+    # Inter-chunk: y_inter[t] = e^{lc_t} C_t . S_prev
+    state = state_scr[...]                           # (N, P)
+    c_decayed = cm * jnp.exp(lc)[:, None]            # (L, N)
+    y += jax.lax.dot(c_decayed, state, preferred_element_type=jnp.float32)
+
+    # State update: S = e^{lc_last} S_prev + sum_s e^{lc_last - lc_s} dt_s B_s x_s
+    carry = jnp.exp(lc[-1])
+    b_weighted = bm * (jnp.exp(lc[-1] - lc) * dt)[:, None]   # (L, N)
+    state_scr[...] = carry * state + jax.lax.dot_general(
+        b_weighted, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, bm: jax.Array,
+             cm: jax.Array, *, chunk: int = 128, interpret: bool = True):
+    """Chunked SSD over (batch, S, H, P); S must be a multiple of ``chunk``
+    (ops.py pads). Returns y with the same shape/dtype as x."""
+    batch, s, h, p = x.shape
+    n = bm.shape[-1]
+    assert s % chunk == 0, "pad sequence to a chunk multiple in ops.py"
+    nc = s // chunk
+    grid = (batch, h, nc)
+
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b, hh, c: (b, c, hh, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, hh, c: (b, c, hh)),
+            pl.BlockSpec((1,), lambda b, hh, c: (hh,)),
+            pl.BlockSpec((1, chunk, n), lambda b, hh, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, hh, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, p), lambda b, hh, c: (b, c, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, bm, cm)

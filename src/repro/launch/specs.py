@@ -1,0 +1,184 @@
+"""ShapeDtypeStruct input specs + sharding assignment for the dry-run.
+
+``input_specs(cfg, shape_name)`` produces weak-type-correct, shardable
+stand-ins for every model input (no device allocation), and the companion
+``*_pspecs`` functions assign PartitionSpecs adaptively: an axis is placed
+on the first listed tensor dim it divides evenly, so e.g. decode_32k shards
+its 128-request batch over (pod, data) while long_500k (batch=1) shards the
+524288 KV slots instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.model import Batch
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str              # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES: Dict[str, ShapeCase] = {
+    "train_4k": ShapeCase("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524288, 1, "decode"),
+}
+
+# Architectures allowed to run long_500k (sub-quadratic decode); see
+# DESIGN.md §5. Everything else is SKIP(full-attn).
+LONG_CONTEXT_ARCHS = {"mamba2-130m", "jamba-v0.1-52b", "mixtral-8x22b"}
+
+
+def media_tokens_for(cfg: ModelConfig, kind: str) -> int:
+    return cfg.n_media_tokens if cfg.cross_attn_every else 0
+
+
+def encoder_len_for(cfg: ModelConfig, case: ShapeCase) -> int:
+    if not cfg.is_encoder_decoder:
+        return 0
+    # Encoder consumes stub frames; cap at the configured stub length.
+    return min(cfg.encoder_seq or 4096, case.seq_len)
+
+
+def batch_specs(cfg: ModelConfig, case: ShapeCase, *,
+                client_dim: int = 0) -> Batch:
+    """ShapeDtypeStructs for the Batch pytree of this (arch, shape)."""
+    b, s = case.global_batch, case.seq_len
+    if case.kind == "decode":
+        s_tok = 1
+    else:
+        s_tok = s
+    lead: Tuple[int, ...] = (client_dim,) if client_dim else ()
+    if client_dim:
+        b = b // client_dim
+
+    def tok(shape):
+        return SDS(lead + shape, jnp.int32)
+
+    def emb(shape):
+        return SDS(lead + shape, jnp.float32)
+
+    media = None
+    if media_tokens_for(cfg, case.kind):
+        media = emb((b, cfg.n_media_tokens, cfg.d_model))
+    frames = None
+    if cfg.is_encoder_decoder:
+        frames = emb((b, encoder_len_for(cfg, case), cfg.d_model))
+    labels = tok((b, s_tok)) if case.kind == "train" else None
+    return Batch(tokens=tok((b, s_tok)), labels=labels, media=media,
+                 frames=frames)
+
+
+# ----------------------------------------------------------------- sharding
+
+def _assign(shape: Tuple[int, ...], wishes, mesh_axes: Dict[str, int]) -> P:
+    """Greedy spec assignment: wishes = [(axis_name, [candidate dims])].
+
+    Each axis lands on the first candidate dim that (a) is unassigned and
+    (b) it divides evenly. Undivisible -> axis dropped (replicated).
+    """
+    spec: list = [None] * len(shape)
+    for axis, dims in wishes:
+        size = mesh_axes[axis] if isinstance(axis, str) else \
+            functools.reduce(lambda a, b: a * mesh_axes[b], axis, 1)
+        for d in dims:
+            if d < len(shape) and spec[d] is None and shape[d] % size == 0 \
+                    and shape[d] > 0:
+                spec[d] = axis if isinstance(axis, str) else tuple(axis)
+                break
+    return P(*spec)
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Batch-parallel axes: ('pod','data') on the multi-pod mesh when used
+    for pure serving; ('data',) otherwise."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_pspecs(batch: Batch, mesh, *, client_dim: bool = False) -> Batch:
+    ax = mesh_axis_sizes(mesh)
+    bp = list(data_axes(mesh))
+    lead = ["pod"] if client_dim else []
+    if client_dim and "pod" in bp:
+        bp.remove("pod")
+
+    def spec(x, is_tokens):
+        if x is None:
+            return None
+        nd = x.ndim
+        wishes = []
+        off = len(lead)
+        if client_dim:
+            wishes.append(("pod", [0]))
+        # batch dim first; long-context decode (batch=1): shard nothing here
+        wishes.append((tuple(bp) if len(bp) > 1 else bp[0], [off]))
+        return _assign(x.shape, wishes, ax)
+
+    return Batch(
+        tokens=spec(batch.tokens, True),
+        labels=spec(batch.labels, True),
+        media=spec(batch.media, False),
+        frames=spec(batch.frames, False),
+    )
+
+
+def serve_state_pspecs(state_shapes, cfg: ModelConfig, mesh):
+    """PartitionSpecs for a ServeState shape-pytree.
+
+    Heuristic per leaf (robust across KVCache / MambaState / cross-kv):
+      1. 'model' axis -> first dim divisible among (kv-head dim, head_dim,
+         trailing feature dims);
+      2. batch-parallel axes -> batch dim if divisible, else the largest
+         remaining divisible dim (the KV slot dim for batch=1 long-context).
+    """
+    ax = mesh_axis_sizes(mesh)
+    bp = data_axes(mesh)
+    bp_axis = bp if len(bp) > 1 else bp[0]
+
+    def spec(x):
+        if x is None:
+            return None
+        shape = x.shape
+        nd = len(shape)
+        if nd == 0 or x.dtype == jnp.int32:
+            return P()
+        # 'model' placement: KV-head dim first (local attention), then the
+        # SLOT/sequence dim (sharded-softmax with tiny stat all-reduces),
+        # and only then head_dim — sharding hd forces an all-gather of the
+        # whole cache per layer per token (measured: it made every GQA
+        # decode collective-bound, §Perf H2 iteration 1).
+        if nd >= 4:
+            model_wish = ("model", [nd - 2, 1, nd - 1])
+        else:
+            model_wish = ("model", list(range(nd - 1, 0, -1)))
+        order = sorted(range(nd), key=lambda d: -shape[d])
+        data_wish = (bp_axis, order)
+        return _assign(shape, [model_wish, data_wish], ax)
+
+    return jax.tree.map(spec, state_shapes)
+
+
+def token_pspec(batch_size: int, mesh) -> P:
+    ax = mesh_axis_sizes(mesh)
+    bp = data_axes(mesh)
+    bp_axis = bp if len(bp) > 1 else bp[0]
+    return _assign((batch_size, 1), [(bp_axis, [0])], ax)

@@ -1,0 +1,214 @@
+"""Grouped-query attention with RoPE, sliding windows, KV caches, cross-attn.
+
+The grouped einsum never materializes expanded KV heads: queries are viewed
+as (batch, seq, kv_heads, group, head_dim) so GQA/MQA cost the true KV
+memory. Caches are static-shaped for jit: a full cache of length C with a
+scalar write pointer, or a rolling window cache (Mixtral SWA / --force-swa)
+storing absolute positions per slot so RoPE stays exact after wraparound.
+On TPU the prefill path routes through the Pallas flash kernel.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_dense, apply_rope, init_dense, \
+    rope_frequencies
+
+_NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, C, KV, hd)
+    v: jax.Array          # (B, C, KV, hd)
+    slot_pos: jax.Array   # (C,) absolute position stored in each slot, -1 empty
+    length: jax.Array     # scalar int32: tokens seen so far
+
+
+def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False):
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(k1, cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": init_dense(k2, cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": init_dense(k3, cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": init_dense(k4, cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def _grouped_attention(q, k, v, *, causal, window, q_offset=0,
+                       kv_valid: Optional[jax.Array] = None,
+                       probs_bf16: bool = False):
+    """q (B,Sq,Hq,hd); k,v (B,Sk,KV,hd). Returns (B,Sq,Hq,hd).
+
+    ``q_offset``: absolute position of q[0] minus that of k[0] (decode).
+    ``kv_valid``: optional (B?, Sk) or (Sk,) bool mask of live cache slots.
+    ``probs_bf16``: keep the s^2-sized score/prob tensors in bf16 (the
+    max/sum reductions stay fp32) — §Perf memory knob.
+    """
+    b, sq, hq, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = hq // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    scale = float(hd) ** -0.5
+    s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale        # (b,kv,g,sq,sk)
+    q_pos = jnp.arange(sq)[:, None] + q_offset
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, _NEG_INF)
+    if kv_valid is not None:
+        kvm = kv_valid if kv_valid.ndim == 2 else kv_valid[None]
+        s = jnp.where(kvm[:, None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if probs_bf16:
+        # fp32 softmax fuses into one pass over the scores; only the
+        # STORED probs (the second-largest s^2 tensor) drop to bf16, so
+        # the p.v einsum reads half the bytes. (Iteration 1 — casting the
+        # whole score path to bf16 — ADDED round-trip traffic: refuted.)
+        p = p.astype(jnp.bfloat16)
+        out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def apply_attention(p, x, cfg: ModelConfig, *, positions=None, causal=True,
+                    window=None, kv_x=None, kv_valid=None):
+    """Full (non-cached) attention: training and prefill.
+
+    ``kv_x`` switches to cross-attention (no RoPE on either side, no mask).
+    """
+    hd = cfg.resolved_head_dim
+    b, s, _ = x.shape
+    q = _split_heads(apply_dense(p["wq"], x), cfg.n_heads, hd)
+    src = x if kv_x is None else kv_x
+    k = _split_heads(apply_dense(p["wk"], src), cfg.n_kv_heads, hd)
+    v = _split_heads(apply_dense(p["wv"], src), cfg.n_kv_heads, hd)
+    if kv_x is None:
+        if positions is None:
+            positions = jnp.arange(s)[None]
+        inv, rot = rope_frequencies(hd, cfg.partial_rotary, cfg.rope_theta)
+        q = apply_rope(q, positions, inv, rot)
+        k = apply_rope(k, positions, inv, rot)
+        out = _grouped_attention(q, k, v, causal=causal, window=window,
+                                 kv_valid=kv_valid,
+                                 probs_bf16=cfg.attn_probs_bf16)
+    else:
+        out = _grouped_attention(q, k, v, causal=False, window=None,
+                                 kv_valid=kv_valid,
+                                 probs_bf16=cfg.attn_probs_bf16)
+    return apply_dense(p["wo"], out.reshape(b, s, -1))
+
+
+# ----------------------------------------------------------------- caching
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> KVCache:
+    hd = cfg.resolved_head_dim
+    return KVCache(
+        k=jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
+        v=jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
+        slot_pos=jnp.full((cache_len,), -1, jnp.int32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill_attention(p, x, cfg: ModelConfig, cache: KVCache, *,
+                      window=None):
+    """Run causal attention over the prompt and fill the cache.
+
+    Rolling semantics: if the prompt is longer than the cache, only the last
+    ``cache_len`` keys survive (window caches are sized to the window).
+    """
+    hd = cfg.resolved_head_dim
+    b, s, _ = x.shape
+    cache_len = cache.k.shape[1]
+    q = _split_heads(apply_dense(p["wq"], x), cfg.n_heads, hd)
+    k = _split_heads(apply_dense(p["wk"], x), cfg.n_kv_heads, hd)
+    v = _split_heads(apply_dense(p["wv"], x), cfg.n_kv_heads, hd)
+    positions = jnp.arange(s)[None]
+    inv, rot = rope_frequencies(hd, cfg.partial_rotary, cfg.rope_theta)
+    q = apply_rope(q, positions, inv, rot)
+    k = apply_rope(k, positions, inv, rot)
+    out = _grouped_attention(q, k, v, causal=True, window=window,
+                             probs_bf16=cfg.attn_probs_bf16)
+
+    pos = jnp.arange(s)
+    slots = pos % cache_len
+    keep = pos >= (s - cache_len)          # only the most recent fit
+    tgt = jnp.where(keep, slots, cache_len)  # cache_len = scratch row
+    k_new = jnp.zeros_like(jnp.pad(cache.k, ((0, 0), (0, 1), (0, 0), (0, 0))))
+    v_new = jnp.zeros_like(k_new)
+    k_new = k_new.at[:, tgt].set(k.astype(cache.k.dtype))[:, :cache_len]
+    v_new = v_new.at[:, tgt].set(v.astype(cache.v.dtype))[:, :cache_len]
+    sp = jnp.full((cache_len + 1,), -1, jnp.int32).at[tgt].set(pos)[:cache_len]
+    new_cache = KVCache(k=k_new, v=v_new, slot_pos=sp,
+                        length=jnp.asarray(s, jnp.int32))
+    return apply_dense(p["wo"], out.reshape(b, s, -1)), new_cache
+
+
+def decode_attention(p, x, cfg: ModelConfig, cache: KVCache, *, window=None):
+    """One-token decode: write slot, attend over live slots. x (B,1,d)."""
+    hd = cfg.resolved_head_dim
+    b = x.shape[0]
+    cache_len = cache.k.shape[1]
+    pos = cache.length                      # absolute position of this token
+    q = _split_heads(apply_dense(p["wq"], x), cfg.n_heads, hd)
+    k = _split_heads(apply_dense(p["wk"], x), cfg.n_kv_heads, hd)
+    v = _split_heads(apply_dense(p["wv"], x), cfg.n_kv_heads, hd)
+    inv, rot = rope_frequencies(hd, cfg.partial_rotary, cfg.rope_theta)
+    q = apply_rope(q, pos[None, None], inv, rot)
+    k = apply_rope(k, pos[None, None], inv, rot)
+
+    slot = pos % cache_len
+    kc = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                      (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                      (0, slot, 0, 0))
+    sp = cache.slot_pos.at[slot].set(pos)
+
+    valid = sp >= 0
+    if window is not None:
+        valid &= sp > pos - window
+    # scores against every slot; masked by validity (positions already rope'd)
+    qg = q.reshape(b, 1, cfg.n_kv_heads, -1, hd)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                   kc.astype(jnp.float32)) * float(hd) ** -0.5
+    s = jnp.where(valid[None, None, None, None, :], s, _NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", prob, vc.astype(jnp.float32))
+    out = out.reshape(b, 1, -1).astype(x.dtype)
+    new_cache = KVCache(k=kc, v=vc, slot_pos=sp, length=pos + 1)
+    return apply_dense(p["wo"], out), new_cache
+
+
+def precompute_cross_kv(p, media, cfg: ModelConfig):
+    """Cross-attention K/V from media/encoder embeddings (computed once)."""
+    hd = cfg.resolved_head_dim
+    k = _split_heads(apply_dense(p["wk"], media), cfg.n_kv_heads, hd)
+    v = _split_heads(apply_dense(p["wv"], media), cfg.n_kv_heads, hd)
+    return k, v
+
+
+def cross_attention_cached(p, x, kv, cfg: ModelConfig):
+    """Decode/prefill cross-attention against precomputed (k, v)."""
+    hd = cfg.resolved_head_dim
+    b, s, _ = x.shape
+    k, v = kv
+    q = _split_heads(apply_dense(p["wq"], x), cfg.n_heads, hd)
+    out = _grouped_attention(q, k, v, causal=False, window=None)
+    return apply_dense(p["wo"], out.reshape(b, s, -1))

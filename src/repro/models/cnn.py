@@ -1,0 +1,106 @@
+"""The paper's experiment CNN (Section VI), functional JAX.
+
+Same family as [8]/[10] (Wang et al.; Han et al.): two 5x5 conv layers with
+2x2 max-pooling, one hidden FC layer, softmax output. Parameter counts land
+near the paper's d = 555,178 (CIFAR-10, 32x32x3, 10 classes) and d = 444,062
+(FEMNIST, 28x28x1, 62 classes); the channel model's ell uses the paper's
+exact d values regardless (see configs/cifar10_cnn.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    height: int
+    width: int
+    channels: int
+    n_classes: int
+    conv1: int = 32
+    conv2: int = 64
+    hidden: int = 120
+    ksize: int = 5
+
+
+def init_cnn(key, cfg: CNNConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    flat = (cfg.height // 4) * (cfg.width // 4) * cfg.conv2
+
+    def conv_init(k, shape, fan_in):
+        return (jax.random.truncated_normal(k, -2, 2, shape)
+                * (2.0 / fan_in) ** 0.5).astype(jnp.float32)
+
+    return {
+        "c1w": conv_init(k1, (cfg.ksize, cfg.ksize, cfg.channels, cfg.conv1),
+                         cfg.ksize * cfg.ksize * cfg.channels),
+        "c1b": jnp.zeros((cfg.conv1,)),
+        "c2w": conv_init(k2, (cfg.ksize, cfg.ksize, cfg.conv1, cfg.conv2),
+                         cfg.ksize * cfg.ksize * cfg.conv1),
+        "c2b": jnp.zeros((cfg.conv2,)),
+        "f1w": conv_init(k3, (flat, cfg.hidden), flat),
+        "f1b": jnp.zeros((cfg.hidden,)),
+        "f2w": conv_init(k4, (cfg.hidden, cfg.n_classes), cfg.hidden),
+        "f2b": jnp.zeros((cfg.n_classes,)),
+    }
+
+
+def _conv(x, w, b):
+    """SAME conv as manual im2col (shifted slices) + matmul.
+
+    XLA:CPU lowers convolutions (and their VJPs) inside scan/while loops to
+    a ~10-50x slower path than standalone convs; the FL simulation runs its
+    local-SGD loop under scan. Patch extraction via pad+slice has a cheap,
+    scan-friendly backward (pad/slice adds), and the contraction is a GEMM
+    — also the MXU-friendly form on TPU.
+    """
+    k, _, cin, cout = w.shape
+    bsz, h, wd, _ = x.shape
+    pad = k // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    cols = [xp[:, di:di + h, dj:dj + wd, :]
+            for di in range(k) for dj in range(k)]
+    patches = jnp.concatenate(cols, axis=-1)            # (B,H,W,k*k*Cin)
+    y = patches.reshape(bsz * h * wd, k * k * cin) @ w.reshape(-1, cout)
+    return jax.nn.relu(y.reshape(bsz, h, wd, cout) + b)
+
+
+def _pool(x):
+    """2x2 max pool via reshape (scan-friendly backward, unlike
+    reduce_window's select-and-scatter)."""
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def apply_cnn(params, images):
+    """images (B, H, W, C) -> logits (B, n_classes)."""
+    x = _conv(images, params["c1w"], params["c1b"])
+    x = _pool(x)
+    x = _conv(x, params["c2w"], params["c2b"])
+    x = _pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["f1w"] + params["f1b"])
+    return x @ params["f2w"] + params["f2b"]
+
+
+def cnn_loss(params, batch):
+    """batch = (images, labels). Mean cross-entropy."""
+    images, labels = batch
+    logits = apply_cnn(params, images)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def cnn_accuracy(params, images, labels, batch: int = 1024):
+    preds = []
+    for i in range(0, images.shape[0], batch):
+        preds.append(jnp.argmax(apply_cnn(params, images[i:i + batch]), -1))
+    return jnp.mean(jnp.concatenate(preds) == labels)
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

@@ -1,0 +1,90 @@
+"""Primitive layers: init + apply, hand-rolled functional JAX (no flax).
+
+Params are plain nested dicts of jnp arrays; every ``init_*`` takes a PRNG
+key and returns such a dict, every ``apply_*`` is pure. Initializers follow
+the common truncated-normal(0.02) / scaled-output convention.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, scale: float = 0.02):
+    return {"w": (jax.random.truncated_normal(key, -2, 2, (d_in, d_out))
+                  * scale).astype(dtype)}
+
+
+def apply_dense(p, x):
+    return x @ p["w"]
+
+
+def init_embedding(key, vocab: int, d: int, dtype):
+    return {"emb": (jax.random.truncated_normal(key, -2, 2, (vocab, d))
+                    * 0.02).astype(dtype)}
+
+
+def apply_embedding(p, tokens):
+    return jnp.take(p["emb"], tokens, axis=0)
+
+
+def init_rmsnorm(d: int, dtype):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def apply_rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["g"]
+
+
+# ------------------------------------------------------------------ RoPE
+
+def rope_frequencies(head_dim: int, rotary_frac: float, theta: float):
+    """Inverse frequencies for the rotary (possibly partial) subspace."""
+    rot_dim = int(head_dim * rotary_frac)
+    rot_dim -= rot_dim % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32)
+                           / rot_dim))
+    return inv, rot_dim
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, inv_freq: jax.Array,
+               rot_dim: int) -> jax.Array:
+    """Rotate the first ``rot_dim`` dims of x (..., seq, heads, head_dim).
+
+    ``positions`` has shape (..., seq) and broadcasts over heads. Partial
+    rotary (rot_dim < head_dim) implements ChatGLM's "2d RoPE" convention of
+    rotating half the head dimension and passing the rest through.
+    """
+    if rot_dim == 0:
+        return x
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (..., s, rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([rotated.astype(x.dtype), xp], axis=-1)
+
+
+# ------------------------------------------------------------------ MLP
+
+def init_swiglu(key, d: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": init_dense(k1, d, d_ff, dtype),
+            "wg": init_dense(k2, d, d_ff, dtype),
+            "wo": init_dense(k3, d_ff, d, dtype)}
+
+
+def apply_swiglu(p, x):
+    h = jax.nn.silu(apply_dense(p["wg"], x)) * apply_dense(p["wi"], x)
+    return apply_dense(p["wo"], h)

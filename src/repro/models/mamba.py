@@ -1,0 +1,161 @@
+"""Mamba-2 block (SSD form) — init/apply for train, prefill and decode.
+
+Follows the mamba2 reference structure: fused input projection producing
+(z, x, B, C, dt), causal depthwise conv over (x, B, C), softplus dt with a
+learned bias, SSD mixing with per-head A and skip D, gated RMSNorm, output
+projection. Train/prefill use the chunked dual form (Pallas kernel on TPU,
+chunked jnp elsewhere); decode carries (conv_state, ssm_state) and costs
+O(1) per token — the reason mamba2/jamba run the 500k-context shape.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_dense, init_dense
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array     # (B, ksize-1, conv_dim) recent conv inputs
+    ssm: jax.Array      # (B, n_heads, d_state, head_p) SSD state (fp32)
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_headdim
+    conv_dim = d_in + 2 * cfg.ssm_state
+    return d_in, nh, conv_dim
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d_in, nh, conv_dim = _dims(cfg)
+    n = cfg.ssm_state
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * n + nh
+    return {
+        "in_proj": init_dense(k1, cfg.d_model, proj_out, dtype),
+        "conv_w": (jax.random.truncated_normal(k2, -2, 2,
+                                               (cfg.ssm_conv, conv_dim))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),  # softplus(-2) ~ 0.13
+        "norm_g": jnp.ones((d_in,), dtype),
+        "out_proj": init_dense(k4, d_in, cfg.d_model, dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    d_in, nh, _ = _dims(cfg)
+    n = cfg.ssm_state
+    z, xs, bm, cm, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    return z, xs, bm, cm, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, history=None):
+    """Depthwise causal conv1d. xbc (B,S,C); history (B,k-1,C) or None."""
+    ksize = conv_w.shape[0]
+    if history is None:
+        history = jnp.zeros((xbc.shape[0], ksize - 1, xbc.shape[-1]),
+                            xbc.dtype)
+    full = jnp.concatenate([history, xbc], axis=1)       # (B, S+k-1, C)
+    # windowed sum: out[t] = sum_j w[j] * full[t+j]
+    s = xbc.shape[1]
+    out = jnp.zeros_like(xbc)
+    for j in range(ksize):
+        out = out + full[:, j:j + s, :] * conv_w[j]
+    out = out + conv_b
+    new_hist = full[:, full.shape[1] - (ksize - 1):, :]
+    return jax.nn.silu(out), new_hist
+
+
+def _gated_norm(y, z, g, eps):
+    h = y * jax.nn.silu(z)
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(hf * hf, axis=-1, keepdims=True)
+    return (hf * jax.lax.rsqrt(var + eps)).astype(y.dtype) * g
+
+
+def apply_mamba(p, x, cfg: ModelConfig, state: MambaState | None = None,
+                return_state: bool = False):
+    """Train/prefill path over (B, S, d_model)."""
+    d_in, nh, conv_dim = _dims(cfg)
+    b, s, _ = x.shape
+    z, xs, bm, cm, dt = _split_proj(apply_dense(p["in_proj"], x), cfg)
+    xbc = jnp.concatenate([xs, bm, cm], axis=-1)
+    hist = state.conv if state is not None else None
+    xbc, new_hist = _causal_conv(xbc, p["conv_w"], p["conv_b"], hist)
+    xs, bm, cm = jnp.split(xbc, [d_in, d_in + cfg.ssm_state], axis=-1)
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    a = -jnp.exp(p["a_log"])                                       # (nh,)
+    xh = xs.reshape(b, s, nh, cfg.ssm_headdim)
+
+    pad = (-s) % cfg.ssm_chunk
+    if pad:
+        xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_p = jnp.pad(dtf, ((0, 0), (0, pad), (0, 0)))
+        bm_p = jnp.pad(bm, ((0, 0), (0, pad), (0, 0)))
+        cm_p = jnp.pad(cm, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xh_p, dt_p, bm_p, cm_p = xh, dtf, bm, cm
+
+    h0 = state.ssm if state is not None else None
+    if kops.on_tpu() and not return_state:
+        y = kops.ssd(xh_p, dt_p, a, bm_p, cm_p, chunk=cfg.ssm_chunk,
+                     interpret=False)[:, :s]
+        h_final = None
+    else:
+        y, h_final = kref.ssd_chunked_ref(xh_p, dt_p, a, bm_p, cm_p,
+                                          chunk=cfg.ssm_chunk, h0=h0,
+                                          unroll=cfg.scan_unroll)
+        y = y[:, :s]
+        if pad:
+            # padded steps have dt==0 -> decay 1, update 0: state unaffected.
+            pass
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(b, s, d_in)
+    y = _gated_norm(y, z, p["norm_g"], cfg.rmsnorm_eps)
+    out = apply_dense(p["out_proj"], y)
+    if return_state:
+        return out, MambaState(conv=new_hist, ssm=h_final)
+    return out
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:
+    d_in, nh, conv_dim = _dims(cfg)
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, nh, cfg.ssm_state, cfg.ssm_headdim),
+                      jnp.float32),
+    )
+
+
+def decode_mamba(p, x, cfg: ModelConfig, state: MambaState
+                 ) -> Tuple[jax.Array, MambaState]:
+    """One-token recurrent step. x (B, 1, d_model)."""
+    d_in, nh, conv_dim = _dims(cfg)
+    b = x.shape[0]
+    z, xs, bm, cm, dt = _split_proj(apply_dense(p["in_proj"], x), cfg)
+    xbc = jnp.concatenate([xs, bm, cm], axis=-1)          # (B,1,conv_dim)
+    xbc, new_hist = _causal_conv(xbc, p["conv_w"], p["conv_b"], state.conv)
+    xs, bm, cm = jnp.split(xbc, [d_in, d_in + cfg.ssm_state], axis=-1)
+
+    dtf = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    a = -jnp.exp(p["a_log"])
+    xh = xs[:, 0].reshape(b, nh, cfg.ssm_headdim)
+    y, new_ssm = kops.ssd_decode_step(state.ssm, xh, dtf, a, bm[:, 0],
+                                      cm[:, 0])
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(b, 1, d_in)
+    y = _gated_norm(y, z, p["norm_g"], cfg.rmsnorm_eps)
+    return apply_dense(p["out_proj"], y), MambaState(conv=new_hist,
+                                                     ssm=new_ssm)

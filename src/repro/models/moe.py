@@ -1,0 +1,98 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (TPU-native).
+
+Instead of the GShard (tokens × experts × capacity) one-hot dispatch tensor
+— prohibitive at Kimi-K2 scale (384 experts) — tokens are argsorted by
+expert id and scattered into a static (experts, capacity) buffer, so expert
+computation is a single grouped GEMM `ecd,edf->ecf` on MXU-shaped operands.
+FLOPs scale with top_k · capacity_factor, never with n_experts. Tokens past
+capacity are dropped (standard capacity-drop semantics); the router's
+load-balance auxiliary loss (Switch-style) keeps drops rare.
+
+Sharding: the expert axis of the stacked weights and the (E, C, d) buffer
+shard over the mesh 'model' axis; XLA lowers the gather/scatter to
+all-to-all style collectives between the token-sharded and expert-sharded
+layouts — the communication pattern the roofline's collective term tracks.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_dense
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, ff, e = cfg.d_model, cfg.resolved_moe_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = 0.02
+    return {
+        "router": init_dense(k1, d, e, jnp.float32),
+        "wi": (jax.random.truncated_normal(k2, -2, 2, (e, d, ff))
+               * scale).astype(dtype),
+        "wg": (jax.random.truncated_normal(k3, -2, 2, (e, d, ff))
+               * scale).astype(dtype),
+        "wo": (jax.random.truncated_normal(k4, -2, 2, (e, ff, d))
+               * scale).astype(dtype),
+    }
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor
+                      / cfg.n_experts))
+    return max(8, c + (-c) % 8)   # 8-aligned for TPU sublanes
+
+
+def apply_moe(p, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x (..., d) -> (y, aux_loss). Router in fp32; experts in param dtype."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xt = x.reshape(-1, d)
+    t = xt.shape[0]
+    e, k = cfg.n_experts, cfg.top_k
+    cap = capacity(t, cfg)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]["w"])         # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, k)                     # (T, K)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance loss.
+    me = jnp.mean(probs, axis=0)                                 # (E,)
+    one_hot = jax.nn.one_hot(top_ids[:, 0], e, dtype=jnp.float32)
+    ce = jnp.mean(one_hot, axis=0)
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_coef
+
+    # ---- sort-based dispatch ------------------------------------------
+    expert_flat = top_ids.reshape(-1)                            # (T*K,)
+    token_flat = jnp.repeat(jnp.arange(t), k)                    # (T*K,)
+    weight_flat = top_w.reshape(-1)
+    order = jnp.argsort(expert_flat, stable=True)
+    se = expert_flat[order]
+    st = token_flat[order]
+    sw = weight_flat[order]
+    counts = jnp.bincount(expert_flat, length=e)                 # (E,)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(t * k) - starts[se]
+    keep = pos_in_e < cap
+    dest = jnp.where(keep, se * cap + pos_in_e, e * cap)         # overflow row
+
+    buf_tok = jnp.full((e * cap + 1,), t, jnp.int32).at[dest].set(st)[:-1]
+    buf_w = jnp.zeros((e * cap + 1,), jnp.float32).at[dest].set(sw)[:-1]
+
+    xp = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    gathered = xp[buf_tok].reshape(e, cap, d)                    # (E, C, d)
+
+    h = jnp.einsum("ecd,edf->ecf", gathered, p["wi"])
+    g = jnp.einsum("ecd,edf->ecf", gathered, p["wg"])
+    act = jax.nn.silu(g) * h
+    out = jnp.einsum("ecf,efd->ecd", act, p["wo"])               # (E, C, d)
+
+    out_flat = out.reshape(e * cap, d) * buf_w[:, None].astype(out.dtype)
+    y = jnp.zeros((t + 1, d), out.dtype).at[buf_tok].add(out_flat)[:t]
+    return y.reshape(orig_shape).astype(x.dtype), aux

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (adam, clip_by_global_norm, momentum, sgd,
+                                    OptState)
+from repro.optim.schedule import constant_schedule, wsd_schedule
+
+__all__ = ["adam", "momentum", "sgd", "clip_by_global_norm", "OptState",
+           "constant_schedule", "wsd_schedule"]

@@ -1,0 +1,81 @@
+"""Minimal functional optimizers (no optax in the container).
+
+Each optimizer is (init_fn, update_fn): update_fn(grads, state, params, lr)
+-> (new_params, new_state). SGD is the paper's local optimizer; Adam and
+momentum serve the non-FL baselines and examples.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: PyTree = None
+    nu: PyTree = None
+
+
+def sgd():
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        new = jax.tree.map(lambda w, g: w - lr * g.astype(w.dtype),
+                           params, grads)
+        return new, OptState(step=state.step + 1)
+
+    return init, update
+
+
+def momentum(beta: float = 0.9):
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params, lr):
+        mu = jax.tree.map(lambda m, g: beta * m + g.astype(m.dtype),
+                          state.mu, grads)
+        new = jax.tree.map(lambda w, m: w - lr * m, params, mu)
+        return new, OptState(step=state.step + 1, mu=mu)
+
+    return init, update
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    def init(params):
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(zeros32, params),
+                        nu=jax.tree.map(zeros32, params))
+
+    def update(grads, state, params, lr):
+        t = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)),
+            state.nu, grads)
+        c1 = 1 - b1 ** t.astype(jnp.float32)
+        c2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(w, m, v):
+            step = lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+            return (w.astype(jnp.float32) - step).astype(w.dtype)
+
+        return jax.tree.map(upd, params, mu, nu), OptState(step=t, mu=mu,
+                                                           nu=nu)
+
+    return init, update
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm

@@ -1,0 +1,34 @@
+"""Learning-rate schedules, incl. MiniCPM's WSD (warmup-stable-decay)
+[arXiv:2404.06395 §4] — the schedule the minicpm-2b config requests."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def wsd_schedule(lr: float, total_steps: int, warmup_frac: float = 0.1,
+                 decay_frac: float = 0.1, floor: float = 0.1):
+    """Warmup -> stable plateau -> exponential-style decay to floor*lr."""
+    warm = max(int(total_steps * warmup_frac), 1)
+    decay_start = int(total_steps * (1.0 - decay_frac))
+    decay_len = max(total_steps - decay_start, 1)
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm_lr = lr * step / warm
+        dec_t = jnp.clip((step - decay_start) / decay_len, 0.0, 1.0)
+        dec_lr = lr * (floor ** dec_t)
+        return jnp.where(step < warm, warm_lr,
+                         jnp.where(step < decay_start, lr, dec_lr))
+
+    return f
+
+
+def get_schedule(name: str, lr: float, total_steps: int):
+    if name == "wsd":
+        return wsd_schedule(lr, total_steps)
+    return constant_schedule(lr)

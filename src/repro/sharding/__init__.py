@@ -1,0 +1,4 @@
+from repro.sharding.rules import (batch_pspec, param_pspecs, ShardingMode,
+                                  serve_batch_pspec)
+
+__all__ = ["batch_pspec", "param_pspecs", "ShardingMode", "serve_batch_pspec"]

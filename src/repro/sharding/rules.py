@@ -1,0 +1,156 @@
+"""PartitionSpec rules for the model zoo on the (pod, data, model) mesh.
+
+Megatron-style tensor parallelism on the ``model`` axis plus optional
+FSDP-style weight sharding on the ``data`` axis (required for the >50B
+configs to fit 16 GB/chip):
+
+* column-parallel projections (wq/wk/wv, mlp wi/wg, mamba in_proj) shard
+  their output dim on ``model`` and input dim on ``data`` (fsdp);
+* row-parallel projections (attention wo, mlp wo, mamba out_proj) shard
+  their input dim on ``model`` and output dim on ``data``;
+* MoE expert banks shard the expert dim on ``model`` (expert parallelism)
+  and the d_model dim on ``data``;
+* embeddings/lm head shard the vocab dim on ``model``;
+* per-head SSM scalars (a_log, dt_bias, d_skip) follow the head sharding.
+
+Period-stacked parameters get a leading ``None`` axis. The ``pod`` axis
+never shards weights — it is the FL client axis (weights are per-client
+replicas there, diverging only inside a round's local steps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingMode:
+    tensor_axis: Optional[str] = "model"
+    fsdp_axis: Optional[str] = None       # 'data' to enable FSDP weight sharding
+    data_axes: tuple = ("data",)          # batch axes for the train step
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            names.append(str(e.key))
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            names.append(f"[{e.idx}]")
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            names.append(e.name)
+    return names
+
+
+def _leaf_spec(names: list[str], ndim: int, mode: ShardingMode) -> P:
+    tp, fsdp = mode.tensor_axis, mode.fsdp_axis
+    stacked = ("period" in names or "encoder" in names)
+    base_ndim = ndim - (1 if stacked else 0)
+    name = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+
+    def out(*spec):
+        spec = list(spec) + [None] * (base_ndim - len(spec))
+        if stacked:
+            spec = [None] + spec
+        return P(*spec)
+
+    # --- embeddings / head -------------------------------------------------
+    if name == "emb":
+        return out(tp, fsdp)
+    if parent == "lm_head":
+        return out(fsdp, tp)
+    # --- MoE ----------------------------------------------------------------
+    if parent == "router":
+        return out(None, None)
+    if name in ("wi", "wg") and base_ndim == 3:
+        return out(tp, fsdp, None)
+    if name == "wo" and base_ndim == 3:
+        return out(tp, None, fsdp)
+    # --- attention / dense mlp ----------------------------------------------
+    if parent in ("wq", "wk", "wv", "wi", "wg"):
+        return out(fsdp, tp)
+    if parent == "wo":
+        return out(tp, fsdp)
+    # --- mamba ---------------------------------------------------------------
+    if parent == "in_proj":
+        return out(fsdp, tp)
+    if parent == "out_proj":
+        return out(tp, fsdp)
+    if name == "conv_w":
+        return out(None, tp)
+    if name in ("conv_b", "norm_g"):
+        return out(tp)
+    if name in ("a_log", "d_skip", "dt_bias"):
+        return out(tp)
+    # --- norms / everything else: replicated ---------------------------------
+    return out()
+
+
+def _sanitize(spec: P, shape, axis_sizes: Optional[dict]) -> P:
+    """Drop axes that do not divide their dim (pjit requires even shards).
+
+    Fallback: if the vocab/model dim of a 2D leaf loses its 'model' axis
+    (odd vocab sizes: minicpm 122753, seamless 256206), try moving the axis
+    to the other dim so the big embedding still shards.
+    """
+    if axis_sizes is None:
+        return spec
+    def size_of(entry):
+        if entry is None:
+            return 1
+        if isinstance(entry, tuple):
+            n = 1
+            for e in entry:
+                n *= axis_sizes.get(e, 1)
+            return n
+        return axis_sizes.get(entry, 1)
+
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    dropped = []
+    for i, e in enumerate(entries):
+        if e is not None and shape[i] % size_of(e) != 0:
+            dropped.append(e)
+            entries[i] = None
+    # try to re-home dropped axes on another divisible, unassigned dim
+    for e in dropped:
+        for i in range(len(shape) - 1, -1, -1):
+            if entries[i] is None and shape[i] % size_of(e) == 0 \
+                    and shape[i] >= size_of(e):
+                entries[i] = e
+                break
+    return P(*entries)
+
+
+def param_pspecs(params, mode: ShardingMode, axis_sizes: Optional[dict] = None):
+    """PartitionSpec pytree matching a params pytree.
+
+    ``axis_sizes`` (e.g. {'data':16,'model':16}) enables divisibility
+    sanitization; without it the raw rules are returned.
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _sanitize(
+            _leaf_spec(_path_names(path), leaf.ndim, mode),
+            leaf.shape, axis_sizes),
+        params)
+
+
+def batch_pspec(mode: ShardingMode, *, client_dim: bool = False):
+    """Spec for Batch fields: tokens/labels (B, S) — or (pods, B, S) when
+    ``client_dim`` — and media/frames (B, M, d)."""
+    lead = ("pod",) if client_dim else ()
+    tok = P(*lead, mode.data_axes[0] if mode.data_axes else None, None)
+    emb = P(*lead, mode.data_axes[0] if mode.data_axes else None, None, None)
+    return {"tokens": tok, "labels": tok, "media": emb, "frames": emb}
+
+
+def serve_batch_pspec(mode: ShardingMode):
+    """Decode-shape batches shard over BOTH data axes (batch is the only
+    parallel dim at decode; model axis shards the weights)."""
+    return batch_pspec(mode)

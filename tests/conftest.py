@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+# Tests run on the single real CPU device; the dry-run (and only the
+# dry-run) forces 512 host devices in its own subprocess.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

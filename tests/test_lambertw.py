@@ -1,0 +1,43 @@
+"""Property tests for the Lambert-W implementation (Algorithm 2's core)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lambertw import lambertw0
+
+
+@settings(deadline=None, max_examples=200)
+@given(st.floats(min_value=0.0, max_value=1e12, allow_nan=False))
+def test_inverse_property(z):
+    """w e^w == z on the whole domain Algorithm 2 uses."""
+    w = float(lambertw0(jnp.float32(z)))
+    assert w >= 0.0
+    lhs = w * np.exp(w)
+    assert np.isclose(lhs, z, rtol=5e-5, atol=1e-6)
+
+
+def test_vectorized_monotone():
+    z = jnp.logspace(-6, 10, 300)
+    w = lambertw0(z)
+    assert bool(jnp.all(jnp.diff(w) >= 0)), "W0 must be increasing"
+    assert bool(jnp.all(jnp.isfinite(w)))
+
+
+def test_zero():
+    assert float(lambertw0(jnp.float32(0.0))) == 0.0
+
+
+def test_known_values():
+    # W0(1) = Omega constant; W0(e) = 1
+    assert np.isclose(float(lambertw0(jnp.float32(1.0))), 0.5671433, atol=1e-5)
+    assert np.isclose(float(lambertw0(jnp.exp(jnp.float32(1.0)))), 1.0,
+                      atol=1e-5)
+
+
+def test_grad_defined():
+    g = jax.grad(lambda z: lambertw0(z))(jnp.float32(2.0))
+    # dW/dz = W / (z (1 + W))
+    w = float(lambertw0(jnp.float32(2.0)))
+    assert np.isclose(float(g), w / (2.0 * (1.0 + w)), rtol=1e-4)

@@ -1,0 +1,29 @@
+"""Baseline-policy invariants."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ChannelConfig, draw_gains, homogeneous_sigmas
+from repro.core.policies import greedy_channel, proportional_gain
+
+CH = ChannelConfig(n_clients=50)
+
+
+def test_greedy_selects_best_channels():
+    gains = jnp.arange(1.0, 51.0)
+    sel, q, p = greedy_channel(jax.random.PRNGKey(0), gains, 5, CH)
+    assert int(sel.sum()) == 5
+    assert bool(sel[-5:].all()) and not bool(sel[:45].any())
+    # power satisfies the average constraint by construction
+    assert float((p * sel.astype(jnp.float32)).sum()) <= CH.p_bar * 50 + 1e-4
+
+
+def test_proportional_gain_targets_average():
+    key = jax.random.PRNGKey(1)
+    gains = draw_gains(key, homogeneous_sigmas(50), CH)
+    sel, q, p = proportional_gain(key, gains, 6.0, CH)
+    assert bool(jnp.all(q > 0)) and bool(jnp.all(q <= 1.0))
+    assert abs(float(q.sum()) - 6.0) < 1.5  # clipping can shift it slightly
+    # monotone in gain
+    order = jnp.argsort(gains)
+    assert bool(jnp.all(jnp.diff(q[order]) >= -1e-7))

@@ -1,0 +1,145 @@
+"""Algorithm-2 scheduler: optimality, constraints, queue dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ChannelConfig, SchedulerConfig, draw_gains,
+                        heterogeneous_sigmas, homogeneous_sigmas, init_state,
+                        sample_selection, schedule_step, solve_round,
+                        update_queues, y0)
+from repro.core.scheduler import _objective
+
+CH = ChannelConfig(n_clients=100)
+CFG = SchedulerConfig(n_clients=100, model_bits=32 * 555178.0, lam=10.0,
+                      V=1000.0)
+
+
+def test_feasibility_bulk():
+    """q in (0,1], P in [0,Pmax] for a wide sweep of states."""
+    key = jax.random.PRNGKey(0)
+    gains = jnp.exp(jax.random.normal(key, (4096,)) * 2.0)
+    z = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (4096,))) * 100
+    q, p = solve_round(gains, z, CFG, CH)
+    assert bool(jnp.all(q > 0)) and bool(jnp.all(q <= 1.0))
+    assert bool(jnp.all(p >= 0)) and bool(jnp.all(p <= CH.p_max))
+    assert bool(jnp.all(jnp.isfinite(q))) and bool(jnp.all(jnp.isfinite(p)))
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.floats(min_value=1e-3, max_value=1e3),     # gain
+       st.floats(min_value=0.0, max_value=1e4),      # queue
+       st.floats(min_value=0.1, max_value=1e3))      # lambda
+def test_closed_form_beats_grid(gain, z, lam):
+    """Theorem 2's closed form must beat a dense grid search of Eq. 15."""
+    cfg = SchedulerConfig(n_clients=100, model_bits=32 * 555178.0, lam=lam,
+                          V=1000.0)
+    g = jnp.float32(gain)
+    zz = jnp.float32(z)
+    q_opt, p_opt = solve_round(g[None], zz[None], cfg, CH)
+    f_opt = float(_objective(q_opt, p_opt, g[None], zz[None], cfg, CH)[0])
+
+    qs = jnp.linspace(1e-4, 1.0, 120)
+    ps = jnp.linspace(1e-3, CH.p_max, 120)
+    qq, pp = jnp.meshgrid(qs, ps)
+    f_grid = _objective(qq.ravel(), pp.ravel(),
+                        jnp.full((120 * 120,), g),
+                        jnp.full((120 * 120,), zz), cfg, CH)
+    f_best = float(jnp.min(f_grid))
+    # closed form should be at least as good as the grid (small tolerance
+    # because the grid is finite)
+    assert f_opt <= f_best + 1e-3 * (abs(f_best) + 1.0)
+
+
+def test_queue_update_matches_eq9():
+    st0 = init_state(CFG)
+    q = jnp.full((100,), 0.5)
+    p = jnp.full((100,), 3.0)
+    st1 = update_queues(st0, q, p, CH)
+    np.testing.assert_allclose(np.asarray(st1.z),
+                               np.full(100, 0.5 * 3.0 - CH.p_bar), rtol=1e-6)
+    # max(.,0): driving negative keeps queues at zero
+    st2 = update_queues(st1, jnp.zeros((100,)), jnp.zeros((100,)), CH)
+    assert bool(jnp.all(st2.z >= 0))
+
+
+def test_average_power_constraint_longrun():
+    """1/T sum P q -> <= Pbar (paper Fig. 5, V moderate)."""
+    cfg = SchedulerConfig(n_clients=50, model_bits=32 * 444062.0, lam=10.0,
+                          V=100.0)
+    ch = ChannelConfig(n_clients=50)
+    sig = heterogeneous_sigmas(50)
+    state = init_state(cfg)
+    key = jax.random.PRNGKey(1)
+    tot = jnp.zeros((50,))
+
+    @jax.jit
+    def step(key, state, tot):
+        k1, k2 = jax.random.split(key)
+        gains = draw_gains(k1, sig, ch)
+        q, p = solve_round(gains, state.z, cfg, ch)
+        state = update_queues(state, q, p, ch)
+        return state, tot + q * p
+
+    rounds = 600
+    for t in range(rounds):
+        key, k = jax.random.split(key)
+        state, tot = step(k, state, tot)
+    avg = np.asarray(tot) / rounds
+    # long-run constraint: average power within 15% of Pbar or below
+    assert np.all(avg <= ch.p_bar * 1.15), avg.max()
+
+
+def test_larger_v_slower_constraint():
+    """Fig. 5: larger V takes longer to satisfy the power constraint."""
+    sig = homogeneous_sigmas(30)
+    ch = ChannelConfig(n_clients=30)
+
+    def avg_violation(v):
+        cfg = SchedulerConfig(n_clients=30, model_bits=32 * 555178.0,
+                              lam=10.0, V=v)
+        state = init_state(cfg)
+        key = jax.random.PRNGKey(2)
+        tot = jnp.zeros((30,))
+        for t in range(120):
+            key, k1, k2 = jax.random.split(key, 3)
+            gains = draw_gains(k1, sig, ch)
+            q, p = solve_round(gains, state.z, cfg, ch)
+            state = update_queues(state, q, p, ch)
+            tot = tot + q * p
+        return float(jnp.mean(tot / 120.0))
+
+    early_small_v = avg_violation(1.0)
+    early_large_v = avg_violation(1e5)
+    assert early_large_v > early_small_v  # large V: constraint met later
+
+
+def test_sample_selection_guarantee():
+    q = jnp.full((20,), 1e-6)
+    sel = sample_selection(jax.random.PRNGKey(0), q, guarantee_one=True)
+    assert int(jnp.sum(sel)) >= 1
+
+
+def test_better_channel_higher_q():
+    """Monotonicity: better instantaneous channel => selected more often."""
+    gains = jnp.array([0.01, 0.1, 1.0, 10.0, 100.0])
+    z = jnp.zeros((5,))
+    cfg = SchedulerConfig(n_clients=5, model_bits=32 * 555178.0, lam=10.0,
+                          V=1000.0)
+    ch = ChannelConfig(n_clients=5)
+    q, p = solve_round(gains, z, cfg, ch)
+    assert bool(jnp.all(jnp.diff(q) >= -1e-6)), q
+
+
+def test_lambda_tradeoff():
+    """Large lambda favors comm-time: average q decreases with lambda."""
+    key = jax.random.PRNGKey(3)
+    gains = jnp.exp(jax.random.normal(key, (100,)))
+    z = jnp.abs(jax.random.normal(key, (100,)))
+    q10, _ = solve_round(gains, z, SchedulerConfig(
+        n_clients=100, model_bits=32 * 555178.0, lam=10.0, V=1000.0), CH)
+    q100, _ = solve_round(gains, z, SchedulerConfig(
+        n_clients=100, model_bits=32 * 555178.0, lam=100.0, V=1000.0), CH)
+    assert float(jnp.mean(q100)) < float(jnp.mean(q10))

@@ -1,0 +1,99 @@
+"""Dry-run spec machinery: shape cases, adaptive sharding assignment."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import specs as S
+
+
+def test_input_shape_catalog():
+    assert set(S.INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                   "long_500k"}
+    assert S.INPUT_SHAPES["train_4k"].global_batch == 256
+    assert S.INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert S.INPUT_SHAPES["long_500k"].kind == "decode"
+
+
+def test_long_context_policy():
+    assert S.LONG_CONTEXT_ARCHS == {"mamba2-130m", "jamba-v0.1-52b",
+                                    "mixtral-8x22b"}
+
+
+def test_assign_respects_divisibility():
+    ax = {"data": 16, "model": 16, "pod": 2}
+    # batch 1 cannot take 'data'; falls to the 524288 slot dim
+    spec = S._assign((1, 524288, 8, 128),
+                     [("model", [2, 3]), ("data", [0, 1])], ax)
+    assert spec == P(None, "data", None, "model")
+    # kv=8 not divisible by 16 -> model lands on head_dim
+    spec = S._assign((128, 32768, 8, 128), [("model", [2, 3])], ax)
+    assert spec == P(None, None, None, "model")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", list(S.INPUT_SHAPES))
+def test_batch_specs_consistent(arch, shape):
+    cfg = get_config(arch)
+    case = S.INPUT_SHAPES[shape]
+    b = S.batch_specs(cfg, case)
+    assert b.tokens.dtype == jnp.int32
+    expect_s = 1 if case.kind == "decode" else case.seq_len
+    assert b.tokens.shape == (case.global_batch, expect_s)
+    if case.kind == "train":
+        assert b.labels.shape == b.tokens.shape
+    if cfg.cross_attn_every:
+        assert b.media.shape[1] == cfg.n_media_tokens
+    if cfg.is_encoder_decoder:
+        assert b.frames is not None and b.frames.shape[2] == cfg.d_model
+
+
+def test_client_dim_batches():
+    cfg = get_config("yi-6b")
+    case = S.INPUT_SHAPES["train_4k"]
+    b = S.batch_specs(cfg, case, client_dim=2)
+    assert b.tokens.shape == (2, 128, 4096)   # 256 split across 2 pods
+
+
+def test_period_decomposition_patterns():
+    jamba = get_config("jamba-v0.1-52b")
+    prefix, period, n = jamba.period_decomposition()
+    assert len(prefix) == 0 and len(period) == 8 and n == 4
+    mixers = [p.mixer for p in period]
+    assert mixers.count("attn") == 1 and mixers[4] == "attn"
+    mlps = [p.mlp for p in period]
+    assert mlps.count("moe") == 4  # every other layer
+
+    kimi = get_config("kimi-k2-1t-a32b")
+    prefix, period, n = kimi.period_decomposition()
+    assert len(prefix) == 1 and prefix[0].mlp == "dense"
+    assert len(period) == 1 and n == 60 and period[0].mlp == "moe"
+
+    vlm = get_config("llama-3.2-vision-11b")
+    _, period, n = vlm.period_decomposition()
+    assert len(period) == 5 and n == 8
+    assert period[4].mixer == "cross_attn"
+
+
+def test_param_counts_scale():
+    """Sanity: full-size param counts are in the right ballpark."""
+    expected = {
+        "mamba2-130m": (0.10e9, 0.2e9),
+        "chatglm3-6b": (5e9, 8e9),
+        "yi-6b": (5e9, 8e9),
+        "mixtral-8x22b": (120e9, 160e9),
+        "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+        "jamba-v0.1-52b": (40e9, 60e9),
+        # 28B with the assigned dims: gpt-bigcode's 2-matrix MLP would be
+        # ~20B; our llama-style SwiGLU (3 matrices at d_ff=24576) is wider.
+        "granite-20b": (18e9, 30e9),
+        "minicpm-2b": (2e9, 3.5e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+    # MoE active params far below total
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert kimi.active_param_count() < 0.06 * kimi.param_count()

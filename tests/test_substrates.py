@@ -1,0 +1,162 @@
+"""Substrate tests: channel model, data pipeline, optimizers, checkpointing,
+sharding rules, CNN."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ChannelConfig, channel_rate, draw_gains,
+                        expected_uplink_time, heterogeneous_sigmas,
+                        homogeneous_sigmas, uplink_time)
+from repro.checkpoint import load_pytree, save_pytree
+from repro.models.cnn import CNNConfig, apply_cnn, cnn_loss, init_cnn
+from repro.optim import adam, clip_by_global_norm, momentum, sgd
+from repro.optim.schedule import wsd_schedule
+from repro.sharding.rules import ShardingMode, param_pspecs
+
+
+# ----------------------------------------------------------------- channel
+
+def test_gain_bounds_enforced():
+    ch = ChannelConfig(n_clients=1000)
+    lo, hi = ch.gain_bounds()
+    g = draw_gains(jax.random.PRNGKey(0), homogeneous_sigmas(1000, 2.0), ch)
+    assert float(g.min()) >= lo - 1e-9 and float(g.max()) <= hi + 1e-9
+    # paper's exact bounds
+    assert np.isclose(hi, (2 ** 10 - 1) * ch.noise_power / ch.p_bar)
+    assert np.isclose(lo, (2 ** 0.25 - 1) * ch.noise_power / ch.p_max)
+
+
+def test_heterogeneous_sigma_fractions():
+    s = heterogeneous_sigmas(100)
+    assert int((s == 0.2).sum()) == 10
+    assert int((s == 0.75).sum()) == 40
+    assert int((s == 1.2).sum()) == 50
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.floats(0.01, 100.0), st.floats(0.01, 100.0))
+def test_rate_monotone_in_power_and_gain(g, p):
+    ch = ChannelConfig(n_clients=1)
+    r1 = float(channel_rate(jnp.float32(g), jnp.float32(p), ch))
+    r2 = float(channel_rate(jnp.float32(g), jnp.float32(p * 2), ch))
+    r3 = float(channel_rate(jnp.float32(g * 2), jnp.float32(p), ch))
+    assert r2 >= r1 and r3 >= r1
+
+
+def test_uplink_time_tdma_sum():
+    ch = ChannelConfig(n_clients=3)
+    gains = jnp.array([1.0, 2.0, 4.0])
+    power = jnp.array([1.0, 1.0, 1.0])
+    sel = jnp.array([True, False, True])
+    ell = 1e6
+    t = float(uplink_time(gains, power, sel, ell, ch))
+    r = channel_rate(gains, power, ch)
+    expect = ell / float(r[0]) + ell / float(r[2])
+    assert np.isclose(t, expect, rtol=1e-6)
+    te = float(expected_uplink_time(gains, power, jnp.array([0.5, 0.5, 0.5]),
+                                    ell, ch))
+    assert te > 0
+
+
+# --------------------------------------------------------------- optimizers
+
+def _quad_problem():
+    params = {"w": jnp.array([2.0, -3.0])}
+    grad_fn = jax.grad(lambda p: jnp.sum(p["w"] ** 2))
+    return params, grad_fn
+
+
+@pytest.mark.parametrize("opt,lr,steps", [(sgd(), 0.05, 60),
+                                          (momentum(), 0.02, 60),
+                                          (adam(), 0.2, 120)])
+def test_optimizers_descend(opt, lr, steps):
+    init, update = opt
+    params, grad_fn = _quad_problem()
+    state = init(params)
+    for _ in range(steps):
+        g = grad_fn(params)
+        params, state = update(g, state, params, lr)
+    assert float(jnp.sum(params["w"] ** 2)) < 0.1
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.array([3.0, 4.0])}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert np.isclose(float(norm), 5.0)
+    assert np.isclose(float(jnp.linalg.norm(clipped["a"])), 1.0)
+
+
+def test_wsd_schedule_shape():
+    f = wsd_schedule(1.0, 100)
+    assert float(f(0)) < 0.2                 # warmup
+    assert np.isclose(float(f(50)), 1.0)     # stable
+    assert float(f(99)) < 0.5                # decay
+    assert float(f(99)) >= 0.1 - 1e-6        # floor
+
+
+# --------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "lst": [jnp.zeros((2,)), jnp.full((3,), 7.0)]}
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_pytree(path, tree)
+    restored = load_pytree(path, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    tree = {"a": jnp.zeros((2, 3))}
+    path = os.path.join(tmp_path, "c.npz")
+    save_pytree(path, tree)
+    with pytest.raises(ValueError):
+        load_pytree(path, {"a": jnp.zeros((3, 2))})
+
+
+# ----------------------------------------------------------------- sharding
+
+def test_param_pspecs_cover_all_leaves():
+    from repro.configs import get_config
+    from repro.models import model as M
+    cfg = get_config("jamba-v0.1-52b").reduced()
+    shapes = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    specs = param_pspecs(shapes, ShardingMode(fsdp_axis="data"),
+                         {"data": 2, "model": 2})
+    leaves_s = jax.tree.leaves(shapes)
+    leaves_p = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    assert len(leaves_s) == len(leaves_p)
+    # every spec is consistent with its leaf's rank & divisibility
+    for s, p in zip(leaves_s, leaves_p):
+        assert len(p) <= s.ndim
+        for dim, entry in zip(s.shape, tuple(p) + (None,) * (s.ndim - len(p))):
+            if entry is None:
+                continue
+            n = 2 if isinstance(entry, str) else 2 ** len(entry)
+            assert dim % n == 0, (s.shape, p)
+
+
+# ----------------------------------------------------------------- CNN
+
+def test_cnn_shapes_and_learning():
+    cfg = CNNConfig(16, 16, 3, 10, conv1=8, conv2=16, hidden=32)
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 16, 3))
+    y = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, 10)
+    logits = apply_cnn(params, x)
+    assert logits.shape == (8, 10)
+    l0 = float(cnn_loss(params, (x, y)))
+    g = jax.grad(cnn_loss)(params, (x, y))
+    params2 = jax.tree.map(lambda w, gw: w - 0.1 * gw, params, g)
+    l1 = float(cnn_loss(params2, (x, y)))
+    assert l1 < l0
