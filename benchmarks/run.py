@@ -153,6 +153,197 @@ def bench_roofline(prof):
           f"dominants={doms}")
 
 
+# ------------------------------------------------------------------- engine
+
+def bench_engine(prof):
+    """Loop-vs-scan engine throughput and jnp-vs-Pallas Theorem-2 solve.
+
+    Three layers, all steady-state (compiled functions warmed before timing,
+    so the numbers isolate the *driving* strategy, not jit compile):
+
+    * full simulation (channel -> schedule -> train -> account) at
+      N in {128, 3597}, eval_every=10: the legacy engine's per-round
+      jit-dispatch + host-sync pattern vs the scan engine's compiled
+      chunks. Bounded below by the conv compute both engines share.
+    * scheduling layer at N in {3597, 100k} (the 100k full sim would
+      materialize a 100k-client dataset): per-round dispatch of the jitted
+      schedule step vs the fully scan-compiled ``run_sweep`` round, where
+      XLA fuses the elementwise channel -> solve -> select -> account chain
+      and the per-call dispatch/sync disappears. This is where the big
+      factor lives.
+    * jnp-vs-Pallas solve at N in {128, 3597, 100k} (interpret off-TPU).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (ChannelConfig, SchedulerConfig, channel_rate,
+                            draw_gains, heterogeneous_sigmas, init_state,
+                            schedule_step)
+    from repro.data.synthetic import make_cifar10_like
+    from repro.fl.engine import (SimConfig, eval_rounds, init_carry,
+                                 make_chunk_runner, make_sim_round,
+                                 make_solve_fn, make_sweep_runner)
+    from repro.fl.simulation import time_to_accuracy
+    from repro.models.cnn import CNNConfig, apply_cnn, init_cnn
+
+    results = {}
+    # steady-state timing window scales with the profile (smoke stays small)
+    rounds = max(20, min(200, 2 * prof.rounds))
+
+    # --- full simulation, loop vs scan -----------------------------------
+    for n in (128, 3597):
+        ds = make_cifar10_like(jax.random.PRNGKey(0), n_clients=n,
+                               per_client=16, n_test=256, h=8, w=8)
+        cnn = CNNConfig(8, 8, 3, 10, conv1=4, conv2=8, hidden=16)
+        params = init_cnn(jax.random.PRNGKey(1), cnn)
+        ch = ChannelConfig(n_clients=n)
+        scfg = SchedulerConfig(n_clients=n, model_bits=32 * 5000.0)
+        sig = heterogeneous_sigmas(n)
+        sim = SimConfig(rounds=rounds, eval_every=10, m_cap=2, batch=4,
+                        local_steps=1, eval_size=256)
+
+        # legacy driving pattern: host split + per-round jit call + float()
+        # syncs + separate eval call (exactly run_simulation_loop's loop)
+        sim_round = jax.jit(make_sim_round(ds, sim, scfg, ch, sig),
+                            donate_argnums=(0,))
+        eval_acc = jax.jit(lambda p: jnp.mean(
+            jnp.argmax(apply_cnn(p, ds.test_images[:256]), -1)
+            == ds.test_labels[:256]))
+
+        def drive_loop():
+            p = jax.tree.map(jnp.array, params)
+            st, key = init_state(scfg), jax.random.PRNGKey(2)
+            t_cum = 0.0
+            for r in range(rounds):
+                key, k = jax.random.split(key)
+                p, st, t, pw, ns = sim_round(p, st, k)
+                t_cum += float(t)
+                _ = float(pw)
+                if r % sim.eval_every == 0 or r == rounds - 1:
+                    _ = float(eval_acc(p))
+            return t_cum
+
+        run_chunk = make_chunk_runner(ds, sim, scfg, ch, sig)
+
+        def drive_scan():
+            carry = init_carry(jax.random.PRNGKey(2), params, scfg)
+            prev = -1
+            for r in eval_rounds(rounds, sim.eval_every):
+                carry, acc, ns = run_chunk(carry, n_rounds=r - prev)
+                prev = r
+                _ = float(carry[3]), float(carry[4]), float(acc)
+            return float(carry[3])
+
+        drive_loop()   # warm both compiled paths
+        drive_scan()
+        t0 = time.time()
+        drive_loop()
+        wall_loop = time.time() - t0
+        t0 = time.time()
+        drive_scan()
+        wall_scan = time.time() - t0
+        rps_loop, rps_scan = rounds / wall_loop, rounds / wall_scan
+        speedup = rps_scan / rps_loop
+        # history via the already-warmed chunk runner (avoids the re-jit a
+        # fresh run_simulation_scan invocation would pay)
+        carry = init_carry(jax.random.PRNGKey(2), params, scfg)
+        hist = {"round": [], "comm_time": [], "test_acc": []}
+        prev = -1
+        for r in eval_rounds(rounds, sim.eval_every):
+            carry, acc, _ = run_chunk(carry, n_rounds=r - prev)
+            prev = r
+            hist["round"].append(r)
+            hist["comm_time"].append(float(carry[3]))
+            hist["test_acc"].append(float(acc))
+        hist = {k: np.asarray(v) for k, v in hist.items()}
+        tta = time_to_accuracy(hist, 0.9 * float(max(hist["test_acc"])))
+        results[f"sim_n{n}"] = {"rounds_per_sec_loop": rps_loop,
+                                "rounds_per_sec_scan": rps_scan,
+                                "speedup": speedup, "tta90_comm_s": tta,
+                                "acc_final": float(hist["test_acc"][-1])}
+        _emit(f"engine_sim_n{n}_loop", 1e6 / rps_loop,
+              f"rounds_per_sec={rps_loop:.1f}")
+        _emit(f"engine_sim_n{n}_scan", 1e6 / rps_scan,
+              f"rounds_per_sec={rps_scan:.1f};speedup_vs_loop={speedup:.2f};"
+              f"tta90_comm_s={tta if tta else 'NA'};"
+              f"acc={hist['test_acc'][-1]:.3f}")
+
+    # --- scheduling layer: per-round dispatch vs compiled scan -----------
+    for n in (3597, 100_000):
+        ch = ChannelConfig(n_clients=n)
+        scfg = SchedulerConfig(n_clients=n, model_bits=32 * 555178.0)
+        sig = heterogeneous_sigmas(n)
+
+        @jax.jit
+        def sched_step(k, state):
+            k1, k2 = jax.random.split(k)
+            gains = draw_gains(k1, sig, ch)
+            sel, q, p, state = schedule_step(k2, gains, state, scfg, ch)
+            t = jnp.sum(jnp.where(sel, scfg.model_bits / jnp.maximum(
+                channel_rate(gains, p, ch), 1e-9), 0.0))
+            return state, t
+
+        def sched_loop():
+            state, key = init_state(scfg), jax.random.PRNGKey(0)
+            t_cum = 0.0
+            for _ in range(rounds):
+                key, k = jax.random.split(key)
+                state, t = sched_step(k, state)
+                t_cum += float(t)
+            return t_cum
+
+        runner = make_sweep_runner(sig, scfg, ch, rounds=rounds,
+                                   policies=("proposed",))
+        keys = jax.random.PRNGKey(0)[None, :]
+        flags = jnp.zeros((1,), jnp.int32)
+
+        def sched_scan():
+            out = runner(keys, flags, jnp.float32(1.0))
+            jax.block_until_ready(out)
+            return out
+
+        sched_loop()   # warm both compiled paths
+        sched_scan()
+        t0 = time.time()
+        sched_loop()
+        wall_loop = time.time() - t0
+        t0 = time.time()
+        sched_scan()
+        wall_scan = time.time() - t0
+        rps_loop, rps_scan = rounds / wall_loop, rounds / wall_scan
+        results[f"sched_n{n}"] = {"rounds_per_sec_loop": rps_loop,
+                                  "rounds_per_sec_scan": rps_scan,
+                                  "speedup": rps_scan / rps_loop}
+        _emit(f"engine_sched_n{n}_loop", 1e6 / rps_loop,
+              f"rounds_per_sec={rps_loop:.1f}")
+        _emit(f"engine_sched_n{n}_scan", 1e6 / rps_scan,
+              f"rounds_per_sec={rps_scan:.1f};"
+              f"speedup_vs_loop={rps_scan / rps_loop:.2f}")
+
+    # --- Theorem-2 solve: jnp closed form vs Pallas kernel ---------------
+    for n in (128, 3597, 100_000):
+        ch = ChannelConfig(n_clients=n)
+        scfg = SchedulerConfig(n_clients=n, model_bits=32 * 555178.0)
+        gains = jnp.exp(jax.random.normal(jax.random.PRNGKey(0), (n,)))
+        z = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (n,)))
+        for solver in ("jnp", "pallas"):
+            # Pallas runs compiled on TPU; in interpret mode elsewhere the
+            # timing documents the (expected, large) CPU validation penalty.
+            solve = jax.jit(make_solve_fn(scfg, ch, solver))
+            jax.block_until_ready(solve(gains, z))
+            iters = 20 if solver == "jnp" else 3
+            t0 = time.time()
+            for _ in range(iters):
+                jax.block_until_ready(solve(gains, z))
+            us = (time.time() - t0) / iters * 1e6
+            mode = ("compiled" if solver == "jnp"
+                    or jax.default_backend() == "tpu" else "interpret")
+            results[f"solve_n{n}_{solver}"] = us
+            _emit(f"engine_solve_n{n}_{solver}", us,
+                  f"per_client_ns={us * 1000 / n:.1f};mode={mode}")
+    _dump("engine", results)
+    return results
+
+
 # ------------------------------------------------------------------ kernels
 
 def bench_kernels(prof):
@@ -179,6 +370,7 @@ def bench_kernels(prof):
 
 
 BENCHES = {
+    "engine": bench_engine,
     "fig2_cifar": bench_fig2_cifar,
     "fig3_lambda": bench_fig3_lambda,
     "fig4_femnist": bench_fig4_femnist,

@@ -1,0 +1,51 @@
+"""Policy x seed scheduling sweep in one compiled call (Figs. 2-5 axes).
+
+Runs Algorithm 2 against the M-matched uniform baseline over several seeds
+with `repro.fl.run_sweep`: every configuration's full trajectory — Rayleigh
+draws, Theorem-2 solve, Bernoulli selection, Eq. (9) queue updates, TDMA
+comm-time and power accounting — executes under a single jit(vmap(scan)),
+so adding seeds or policies costs no extra dispatch.
+
+    PYTHONPATH=src python examples/policy_sweep.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import ChannelConfig, SchedulerConfig, heterogeneous_sigmas
+from repro.fl import run_sweep
+
+
+def main():
+    n = 100
+    rounds = 300
+    seeds = (0, 1, 2, 3)
+    ch = ChannelConfig(n_clients=n)
+    scfg = SchedulerConfig(n_clients=n, model_bits=32 * 555178.0, lam=10.0,
+                           V=1000.0)
+    sig = heterogeneous_sigmas(n)   # 10% bad, 40% medium, 50% good channels
+
+    sw = run_sweep(jax.random.PRNGKey(0), sig, scfg, ch, rounds=rounds,
+                   seeds=seeds)
+    print(f"N={n}, rounds={rounds}, seeds={list(seeds)}, "
+          f"matched M={float(sw['uniform_m']):.2f}\n")
+
+    comm = sw["comm_time"][:, :, -1]          # (policy, seed) final comm time
+    nsel = sw["n_selected"].mean(axis=-1)     # mean devices per round
+    pwr = sw["avg_power"][:, :, -1]           # running avg of sum P q / N
+    for i, pol in enumerate(sw["policies"]):
+        print(f"{pol:>9}: comm {comm[i].mean():8.1f}s "
+              f"(+/- {comm[i].std():.1f}), "
+              f"devices/round {nsel[i].mean():5.2f}, "
+              f"avg power {pwr[i].mean():.3f} (Pbar={ch.p_bar})")
+
+    saving = 1.0 - comm[0].mean() / comm[1].mean()
+    print(f"\ncommunication-time saving vs uniform: {saving:.1%} "
+          f"(paper reports up to 58% at scale)")
+    # Fig. 5 flavor: the proposed policy's time-average power approaches Pbar
+    tail = sw["avg_power"][0, :, rounds // 2:].mean()
+    print(f"proposed time-average power over the last half: {tail:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point (CI mirrors this; see .github/workflows/ci.yml).
+#
+# Forces 8 virtual CPU devices so the multi-device sharding tests exercise
+# real pjit partitioning without a TPU (idiom from SNIPPETS.md).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec python -m pytest -x -q -m "not slow" "$@"

@@ -14,7 +14,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-_HALLEY_ITERS = 8
+# Halley is cubic: from the piecewise initial guess, 3 iterations reach
+# float32 round-off and 4 reach float64 round-off over [0, 1e12] (checked
+# against scipy.special.lambertw; tests/test_lambertw.py covers the domain).
+# The solve is ~40% Lambert-W on CPU, so the iteration count is a hot knob.
+_HALLEY_ITERS = 4
 
 
 def _initial_guess(z: jax.Array) -> jax.Array:

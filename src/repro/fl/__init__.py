@@ -1,5 +1,16 @@
+# Engine internals (make_sim_round, make_chunk_runner, init_carry,
+# eval_rounds, make_sweep_runner) stay importable from repro.fl.engine but
+# are not part of the package surface — the carry/chunk layout is free to
+# change without breaking the public API.
+from repro.fl.engine import (SimConfig, make_solve_fn, run_simulation_scan,
+                             run_sweep)
 from repro.fl.round import (fl_round, local_sgd, make_fl_train_step,
                             make_train_step, weighted_aggregate)
+from repro.fl.simulation import (match_uniform_m, run_simulation,
+                                 run_simulation_loop, time_to_accuracy)
 
 __all__ = ["fl_round", "local_sgd", "make_fl_train_step", "make_train_step",
-           "weighted_aggregate"]
+           "weighted_aggregate",
+           "SimConfig", "make_solve_fn",
+           "run_simulation", "run_simulation_loop", "run_simulation_scan",
+           "run_sweep", "match_uniform_m", "time_to_accuracy"]

@@ -6,6 +6,15 @@ paper's CNN -> TDMA communication-time accounting. Computation time is
 excluded from the clock, as in Section VI ("we assume that the computation
 time is much less than communication time").
 
+``run_simulation`` dispatches on ``SimConfig.engine``:
+
+* ``"scan"`` (default) — the lax.scan-compiled engine in ``repro.fl.engine``:
+  rounds between eval points run in one compiled chunk, accounting stays
+  device-resident, host syncs only at eval points.
+* ``"loop"`` — the legacy per-round Python loop below, kept as an
+  independently-implemented reference: tests/test_engine.py checks the two
+  engines produce the same history from the same PRNG key.
+
 Memory note: only up to ``m_cap`` sampled participants are simulated per
 round (Algorithm 1's aggregation takes zero contribution from everyone
 else), so N=3597 FEMNIST clients never materialize 3597 model replicas.
@@ -13,10 +22,8 @@ else), so N=3597 FEMNIST clients never materialize 3597 model replicas.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
-import time
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,26 +31,16 @@ import numpy as np
 
 from repro.core import (ChannelConfig, SchedulerConfig, channel_rate,
                         draw_gains, estimate_avg_selected, init_state,
-                        sample_selection, schedule_step, solve_round,
-                        uniform_selection, update_queues)
+                        schedule_step, uniform_selection)
 from repro.data.synthetic import FederatedDataset
+from repro.fl.engine import (SimConfig, make_solve_fn, run_simulation_scan,
+                             run_sweep)
 from repro.fl.round import local_sgd
 from repro.models.cnn import apply_cnn, cnn_loss
 
-
-@dataclasses.dataclass
-class SimConfig:
-    rounds: int = 200
-    gamma: float = 0.01          # paper: 0.01
-    local_steps: int = 10        # I
-    batch: int = 32
-    m_cap: int = 32              # max simulated participants per round
-    eval_every: int = 10
-    eval_size: int = 2000
-    policy: str = "proposed"     # proposed | uniform
-    aggregation: str = "paper"   # paper (Alg.1 l.7) | delta (variance-reduced)
-    uniform_m: float = 0.0       # matched M for the uniform baseline
-    seed: int = 0
+__all__ = ["SimConfig", "run_simulation", "run_simulation_loop",
+           "run_simulation_scan", "run_sweep", "make_solve_fn",
+           "match_uniform_m", "time_to_accuracy"]
 
 
 def _select_proposed(key, gains, sched_state, scfg, ch):
@@ -83,8 +80,24 @@ def _round_update(params, sel_idx, sel_valid, q_sel, batches, gamma, steps,
 def run_simulation(key, params, ds: FederatedDataset, sim: SimConfig,
                    scfg: SchedulerConfig, ch: ChannelConfig,
                    sigmas: jax.Array) -> Dict[str, np.ndarray]:
-    """Returns history dict: comm_time (cumulative s), test_acc, loss,
-    avg_power (per-round E[P q]), n_selected."""
+    """Returns history dict: round, comm_time (cumulative s), test_acc,
+    avg_power (per-round E[P q]), n_selected.
+
+    Thin dispatcher: ``sim.engine`` picks the scan-compiled engine (default)
+    or the legacy per-round loop; both return the same history layout.
+    """
+    if sim.engine == "scan":
+        return run_simulation_scan(key, params, ds, sim, scfg, ch, sigmas)
+    if sim.engine != "loop":
+        raise ValueError(f"unknown engine {sim.engine!r} (want 'scan'|'loop')")
+    return run_simulation_loop(key, params, ds, sim, scfg, ch, sigmas)
+
+
+def run_simulation_loop(key, params, ds: FederatedDataset, sim: SimConfig,
+                        scfg: SchedulerConfig, ch: ChannelConfig,
+                        sigmas: jax.Array) -> Dict[str, np.ndarray]:
+    """Legacy engine: one jit dispatch + host sync per round (the reference
+    implementation the scan engine is tested against)."""
     n = ds.n_clients
     m_cap = sim.m_cap
     sched_state = init_state(scfg)

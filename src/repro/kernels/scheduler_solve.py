@@ -31,7 +31,7 @@ def _halley_w0(z):
     lz = jnp.log(safe)
     llz = jnp.log(lz)
     w = jnp.where(z < 1.0, z * (1.0 - z + 1.5 * z * z), lz - llz + llz / lz)
-    for _ in range(8):
+    for _ in range(4):  # cubic convergence: 4 from this init is f64-exact
         ew = jnp.exp(w)
         f = w * ew - z
         denom = ew * (w + 1.0) - (w + 2.0) * f / (2.0 * w + 2.0)
@@ -91,13 +91,17 @@ def _kernel(gains_ref, z_ref, q_ref, p_ref, *, params):
 def scheduler_solve(gains: jax.Array, z: jax.Array, *, n: int, v: float,
                     lam: float, ell: float, bandwidth: float, noise: float,
                     p_max: float, p_bar: float, q_floor: float = 1e-5,
-                    interpret: bool = True, block: int = _BLOCK):
+                    interpret: bool | None = None, block: int = _BLOCK):
     """Tiled Pallas evaluation of Theorem 2 over a flat client vector.
 
     gains, z: (N,) float32. Returns (q, P), each (N,) float32. N is padded to
     a multiple of ``block`` internally; on TPU each block is one VMEM-resident
-    (8, 128)-tiled VPU pass.
+    (8, 128)-tiled VPU pass. ``interpret=None`` auto-selects: compiled on a
+    TPU backend, interpret mode everywhere else — this is what lets the
+    simulation engine's ``solver="pallas"`` config run unchanged on CPU.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     assert gains.shape == z.shape and gains.ndim == 1
     n_real = gains.shape[0]
     pad = (-n_real) % block

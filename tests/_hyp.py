@@ -1,0 +1,50 @@
+"""Optional-hypothesis shim for the property tests.
+
+``hypothesis`` is a test-only dependency (declared in requirements-test.txt)
+and may be absent in minimal environments. Importing ``given``/``settings``/
+``st`` from here instead of from ``hypothesis`` keeps collection working
+either way: with hypothesis installed the real decorators are re-exported;
+without it each property test body is replaced by a clean pytest skip while
+the plain (non-property) tests in the same module still run.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any ``st.<name>(...)`` call; the value is never drawn."""
+
+        def __getattr__(self, name):
+            def strategy(*args, **kwargs):
+                return None
+
+            return strategy
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # No functools.wraps: copying fn's signature would make pytest
+            # treat the hypothesis-drawn parameters as fixtures.
+            def skipper():
+                pytest.skip("hypothesis not installed (see "
+                            "requirements-test.txt)")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
