@@ -3,9 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
-import json
-import time
-from typing import Dict, List
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -13,12 +11,12 @@ import numpy as np
 
 from repro.configs.cifar10_cnn import CONFIG as CIFAR_EXP
 from repro.configs import femnist_cnn
-from repro.core import (ChannelConfig, SchedulerConfig, draw_gains,
-                        heterogeneous_sigmas, homogeneous_sigmas, init_state,
-                        solve_round, update_queues)
+from repro.core import (draw_gains, heterogeneous_sigmas,
+                        homogeneous_sigmas, init_state, solve_round,
+                        update_queues)
 from repro.data.synthetic import make_cifar10_like, make_femnist_like
-from repro.fl.simulation import (SimConfig, match_uniform_m, run_simulation,
-                                 time_to_accuracy)
+from repro.fl.simulation import (SimConfig, match_uniform_m,
+                                 run_simulation)
 from repro.models.cnn import init_cnn
 
 

@@ -7,11 +7,9 @@ single-pod, scan-unrolled linear-probe totals) into markdown.
 
 from __future__ import annotations
 
-import json
 import sys
 
-from benchmarks.roofline import (load_records, model_flops, roofline_terms,
-                                 PEAK_FLOPS)
+from benchmarks.roofline import load_records, model_flops, roofline_terms
 
 
 def fmt_bytes(n):

@@ -43,7 +43,6 @@ def roofline_terms(rec: Dict) -> Optional[Dict]:
     scanned-layer work (see DESIGN.md §10)."""
     if rec.get("status") != "OK":
         return None
-    chips = rec["n_devices"]
     compute_s = rec["flops"] / PEAK_FLOPS
     memory_s = rec["bytes_accessed"] / HBM_BW
     # collective instructions in the SPMD program carry per-device shard

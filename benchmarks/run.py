@@ -210,12 +210,13 @@ def bench_engine(prof):
             == ds.test_labels[:256]))
 
         def drive_loop():
-            p = jax.tree.map(jnp.array, params)
-            st, key = init_state(scfg), jax.random.PRNGKey(2)
+            p, pst, cst = init_carry(jax.random.PRNGKey(2), params,
+                                      scfg, sim=sim, sigmas=sig, ch=ch)[:3]
+            key = jax.random.PRNGKey(2)
             t_cum = 0.0
             for r in range(rounds):
                 key, k = jax.random.split(key)
-                p, st, t, pw, ns = sim_round(p, st, k)
+                p, pst, cst, t, pw, ns = sim_round(p, pst, cst, k)
                 t_cum += float(t)
                 _ = float(pw)
                 if r % sim.eval_every == 0 or r == rounds - 1:
@@ -225,13 +226,19 @@ def bench_engine(prof):
         run_chunk = make_chunk_runner(ds, sim, scfg, ch, sig)
 
         def drive_scan():
-            carry = init_carry(jax.random.PRNGKey(2), params, scfg)
+            # history capture is part of the timed drive — the cost of
+            # recording eval points belongs to the driving strategy
+            carry = init_carry(jax.random.PRNGKey(2), params, scfg,
+                               sim=sim, sigmas=sig, ch=ch)
+            hist = {"round": [], "comm_time": [], "test_acc": []}
             prev = -1
             for r in eval_rounds(rounds, sim.eval_every):
                 carry, acc, ns = run_chunk(carry, n_rounds=r - prev)
                 prev = r
-                _ = float(carry[3]), float(carry[4]), float(acc)
-            return float(carry[3])
+                hist["round"].append(r)
+                hist["comm_time"].append(float(carry[4]))
+                hist["test_acc"].append(float(acc))
+            return {k: np.asarray(v) for k, v in hist.items()}
 
         drive_loop()   # warm both compiled paths
         drive_scan()
@@ -239,22 +246,10 @@ def bench_engine(prof):
         drive_loop()
         wall_loop = time.time() - t0
         t0 = time.time()
-        drive_scan()
+        hist = drive_scan()
         wall_scan = time.time() - t0
         rps_loop, rps_scan = rounds / wall_loop, rounds / wall_scan
         speedup = rps_scan / rps_loop
-        # history via the already-warmed chunk runner (avoids the re-jit a
-        # fresh run_simulation_scan invocation would pay)
-        carry = init_carry(jax.random.PRNGKey(2), params, scfg)
-        hist = {"round": [], "comm_time": [], "test_acc": []}
-        prev = -1
-        for r in eval_rounds(rounds, sim.eval_every):
-            carry, acc, _ = run_chunk(carry, n_rounds=r - prev)
-            prev = r
-            hist["round"].append(r)
-            hist["comm_time"].append(float(carry[3]))
-            hist["test_acc"].append(float(acc))
-        hist = {k: np.asarray(v) for k, v in hist.items()}
         tta = time_to_accuracy(hist, 0.9 * float(max(hist["test_acc"])))
         results[f"sim_n{n}"] = {"rounds_per_sec_loop": rps_loop,
                                 "rounds_per_sec_scan": rps_scan,
@@ -292,12 +287,11 @@ def bench_engine(prof):
             return t_cum
 
         runner = make_sweep_runner(sig, scfg, ch, rounds=rounds,
-                                   policies=("proposed",))
+                                   policy="proposed")
         keys = jax.random.PRNGKey(0)[None, :]
-        flags = jnp.zeros((1,), jnp.int32)
 
         def sched_scan():
-            out = runner(keys, flags, jnp.float32(1.0))
+            out = runner(keys)
             jax.block_until_ready(out)
             return out
 
@@ -344,6 +338,94 @@ def bench_engine(prof):
     return results
 
 
+# --------------------------------------------------------------------- grid
+
+def bench_grid(prof):
+    """Scenario-grid throughput: one shard_map-compiled call over all
+    devices vs the same configs run sequentially through per-config jitted
+    runners (both steady-state, compiled paths warmed).
+
+    Dispatch-bound sizes (tiny model, few rounds) are where device sharding
+    pays: expect near-linear scaling in device count once the per-device
+    config count saturates. Run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (scripts/test.sh
+    idiom) to see multi-device numbers on CPU.
+    """
+    import jax
+    from repro.core import ChannelConfig, SchedulerConfig
+    from repro.core.channel import resolve_sigmas
+    from repro.data.synthetic import make_cifar10_like
+    from repro.fl.engine import SimConfig, make_config_runner
+    from repro.fl.grid import (GridSpec, grid_cell_inputs, make_grid_runner,
+                               sim_for_config)
+    from repro.models.cnn import CNNConfig, init_cnn
+
+    n = 64
+    ds = make_cifar10_like(jax.random.PRNGKey(0), n_clients=n,
+                           per_client=16, n_test=128, h=8, w=8)
+    cnn = CNNConfig(8, 8, 3, 10, conv1=4, conv2=8, hidden=16)
+    params = init_cnn(jax.random.PRNGKey(1), cnn)
+    ch = ChannelConfig(n_clients=n)
+    scfg = SchedulerConfig(n_clients=n, model_bits=32 * 5000.0)
+    rounds = max(5, min(20, prof.rounds // 4))
+    sim = SimConfig(rounds=rounds, eval_every=5, m_cap=2, batch=4,
+                    local_steps=1, eval_size=128, uniform_m=4.0)
+    spec = GridSpec(
+        channels=("rayleigh", ("gauss_markov", (("rho", 0.9),))),
+        sigma_dists=("heterogeneous",),
+        policies=("proposed", "uniform", "update_aware"),
+        seeds=tuple(range(4)),
+    )
+    key = jax.random.PRNGKey(7)
+    n_dev = len(jax.devices())
+
+    runner, _ = make_grid_runner(ds, sim, scfg, ch, spec)
+    sigma_ids, keys = grid_cell_inputs(key, spec, n_dev)
+
+    def drive_grid():
+        out = runner(params, sigma_ids, keys)
+        jax.block_until_ready(out)
+        return out
+
+    # sequential reference: per-(channel, policy) jitted config runner
+    # (compiled once per cell, reused across seeds), one config at a time
+    seq_runners = []
+    for ci, pi in spec.cells():
+        one, sdist = sim_for_config(sim, spec, ci, 0, pi)
+        seq_runners.append(
+            make_config_runner(ds, one, scfg, ch, resolve_sigmas(sdist, n)))
+    seed_keys = [jax.random.fold_in(key, s) for s in spec.seeds]
+
+    def drive_seq():
+        outs = []
+        for r in seq_runners:
+            for k in seed_keys:
+                outs.append(r(params, k))
+        jax.block_until_ready(outs)
+        return outs
+
+    drive_grid()   # warm both compiled paths
+    drive_seq()
+    t0 = time.time()
+    drive_grid()
+    wall_grid = time.time() - t0
+    t0 = time.time()
+    drive_seq()
+    wall_seq = time.time() - t0
+    c = spec.size
+    cps_grid, cps_seq = c / wall_grid, c / wall_seq
+    speedup = cps_grid / cps_seq
+    _emit("grid_sequential", 1e6 / cps_seq, f"configs_per_sec={cps_seq:.2f}")
+    _emit("grid_shard_map", 1e6 / cps_grid,
+          f"configs_per_sec={cps_grid:.2f};devices={n_dev};"
+          f"speedup_vs_sequential={speedup:.2f};configs={c}")
+    _dump("grid", {"configs": c, "devices": n_dev, "rounds": rounds,
+                   "configs_per_sec_grid": cps_grid,
+                   "configs_per_sec_sequential": cps_seq,
+                   "speedup": speedup})
+    return {"speedup": speedup, "devices": n_dev}
+
+
 # ------------------------------------------------------------------ kernels
 
 def bench_kernels(prof):
@@ -371,6 +453,7 @@ def bench_kernels(prof):
 
 BENCHES = {
     "engine": bench_engine,
+    "grid": bench_grid,
     "fig2_cifar": bench_fig2_cifar,
     "fig3_lambda": bench_fig3_lambda,
     "fig4_femnist": bench_fig4_femnist,
@@ -391,8 +474,14 @@ def main(argv=None):
     prof = SMOKE if args.smoke else (FULL if args.full else BenchProfile())
 
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - set(BENCHES)
+        if unknown:
+            ap.error(f"unknown benchmarks {sorted(unknown)} "
+                     f"(available: {sorted(BENCHES)})")
     print("name,us_per_call,derived")
     fig2 = None
+    failed = []
     for name, fn in BENCHES.items():
         if only and name not in only:
             continue
@@ -405,6 +494,11 @@ def main(argv=None):
                 fn(prof)
         except Exception as e:  # noqa: BLE001
             _emit(name, -1.0, f"ERROR:{e!r}")
+            failed.append(name)
+    if failed:
+        # a crashed bench must fail CI's smoke job, not hide behind the
+        # other benches' successful JSON dumps
+        raise SystemExit(f"benchmarks failed: {failed}")
 
 
 if __name__ == "__main__":

@@ -10,7 +10,6 @@ so adding seeds or policies costs no extra dispatch.
 """
 
 import jax
-import numpy as np
 
 from repro.core import ChannelConfig, SchedulerConfig, heterogeneous_sigmas
 from repro.fl import run_sweep
@@ -41,7 +40,7 @@ def main():
 
     saving = 1.0 - comm[0].mean() / comm[1].mean()
     print(f"\ncommunication-time saving vs uniform: {saving:.1%} "
-          f"(paper reports up to 58% at scale)")
+          "(paper reports up to 58% at scale)")
     # Fig. 5 flavor: the proposed policy's time-average power approaches Pbar
     tail = sw["avg_power"][0, :, rounds // 2:].mean()
     print(f"proposed time-average power over the last half: {tail:.3f}")

@@ -48,7 +48,7 @@ def main():
 
     saving = 1.0 - hp["comm_time"][-1] / hu["comm_time"][-1]
     print(f"\ncommunication-time saving vs uniform: {saving:.1%} "
-          f"(paper reports up to 58% at scale)")
+          "(paper reports up to 58% at scale)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Lint entry point (CI mirrors this; see .github/workflows/ci.yml).
+#
+# Uses ruff with the repo's ruff.toml: pyflakes + pycodestyle E/W, which
+# covers format hygiene (line length, trailing whitespace, final newlines)
+# without imposing a wholesale ruff-format reflow on a pre-existing style.
+#
+# Usage: scripts/lint.sh [extra ruff args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v ruff >/dev/null 2>&1 && ! python -m ruff --version >/dev/null 2>&1; then
+  echo "ruff is not installed (pip install ruff)" >&2
+  exit 1
+fi
+
+RUFF="ruff"
+command -v ruff >/dev/null 2>&1 || RUFF="python -m ruff"
+
+exec $RUFF check src tests benchmarks examples "$@"

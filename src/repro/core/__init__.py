@@ -3,10 +3,17 @@
 from repro.core.bound import (BoundAccumulator, BoundConstants, accumulate,
                               corollary1_bound, init_accumulator,
                               sampling_term_per_round)
-from repro.core.channel import (ChannelConfig, channel_rate, draw_gains,
+from repro.core.channel import (CHANNEL_IDS, CHANNEL_MODELS, SIGMA_DISTS,
+                                ChannelConfig, ChannelModel, channel_rate,
+                                channel_state_zero, draw_gains,
                                 expected_uplink_time, heterogeneous_sigmas,
-                                homogeneous_sigmas, uplink_time)
+                                homogeneous_sigmas, make_channel,
+                                resolve_sigmas, uplink_time)
 from repro.core.lambertw import lambertw0
+from repro.core.policies import (POLICIES, POLICY_IDS, PolicyState,
+                                 greedy_channel, init_policy_state,
+                                 make_policy, policy_aux_init,
+                                 proportional_gain)
 from repro.core.scheduler import (SchedulerConfig, SchedulerState,
                                   estimate_avg_selected, init_state,
                                   sample_selection, schedule_step, solve_round,
@@ -15,9 +22,14 @@ from repro.core.scheduler import (SchedulerConfig, SchedulerState,
 __all__ = [
     "BoundAccumulator", "BoundConstants", "accumulate", "corollary1_bound",
     "init_accumulator", "sampling_term_per_round",
-    "ChannelConfig", "channel_rate", "draw_gains", "expected_uplink_time",
-    "heterogeneous_sigmas", "homogeneous_sigmas", "uplink_time",
+    "CHANNEL_IDS", "CHANNEL_MODELS", "SIGMA_DISTS", "ChannelConfig",
+    "ChannelModel", "channel_rate", "channel_state_zero", "draw_gains",
+    "expected_uplink_time", "heterogeneous_sigmas", "homogeneous_sigmas",
+    "make_channel", "resolve_sigmas", "uplink_time",
     "lambertw0",
+    "POLICIES", "POLICY_IDS", "PolicyState", "greedy_channel",
+    "init_policy_state", "make_policy", "policy_aux_init",
+    "proportional_gain",
     "SchedulerConfig", "SchedulerState", "estimate_avg_selected", "init_state",
     "sample_selection", "schedule_step", "solve_round", "uniform_selection",
     "update_queues", "y0",

@@ -1,27 +1,50 @@
-"""Wireless substrate: Rayleigh block-fading channels + TDMA uplink time model.
+"""Wireless substrate: fading-channel registry + TDMA uplink time model.
 
-Reproduces Section VI's channel setup exactly:
+Reproduces Section VI's channel setup exactly, and generalizes it to a
+registry of fading models so sweeps can compare scenarios:
 
-* each client n draws an i.i.d. (per round) Rayleigh envelope |h_n(t)| with
-  per-client scale sigma_n, so the gain |h_n(t)|^2 is exponential with mean
-  2 sigma_n^2;
-* gains are clipped to a realistic modulation range:
+* ``rayleigh`` (the paper's model) — i.i.d. per-round Rayleigh envelope
+  |h_n(t)| with per-client scale sigma_n, so the gain |h_n(t)|^2 is
+  exponential with mean 2 sigma_n^2;
+* ``rician`` — line-of-sight component with K-factor; K -> 0 recovers
+  Rayleigh (same stationary gain distribution);
+* ``lognormal`` — Rayleigh fast fading times log-normal shadowing
+  (sigma_db dB standard deviation), mean-normalized so the average gain
+  stays 2 sigma_n^2;
+* ``gauss_markov`` — temporally-correlated complex AR(1) field
+  g(t) = rho g(t-1) + sqrt(1-rho^2) w(t), the standard block-to-block
+  correlated fading model; rho = 0 recovers i.i.d. Rayleigh.
+
+Every model is a pure ``(key, state) -> (gains, state)`` step (state is a
+fixed-shape (2, N) float32 array — the in-phase/quadrature field for
+correlated models, zeros otherwise) so any model drops into the scan
+engine, the sweep runner, and the shard_map grid unchanged.
+
+Gains from all models are clipped to a realistic modulation range:
     upper:  |h|^2 <  (2^10   - 1) N0 / Pbar   (1024-QAM, 10 b/s/Hz at Pbar)
     lower:  |h|^2 >= (2^0.25 - 1) N0 / Pmax   (rate-1/4 coding floor at Pmax)
-* the uplink is TDMA: the round's communication time is the SUM over selected
-  clients of  ell / (B log2(1 + |h|^2 P / N0))  — capacity-achieving lower
-  bound, as in Eq. (8).
 
-Everything is functional and jit-friendly; the channel state is just a PRNG key.
+The uplink is TDMA: the round's communication time is the SUM over selected
+clients of  ell / (B log2(1 + |h|^2 P / N0))  — capacity-achieving lower
+bound, as in Eq. (8).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+import math
+from typing import Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+
+# The bitwise contract (grid == per-config scan engine, tests/test_grid.py)
+# requires a channel step to produce identical bits whether its sigmas are a
+# closed-over constant or a traced table row, and whatever the surrounding
+# program looks like. Without the pin XLA reassociates constant factors
+# (e.g. folding sigma * sqrt(2) into the erf_inv chain of ``normal``) and
+# refuses the draw chains per context, drifting gains by a ulp per round.
+from repro.core.fences import pin as _pin
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,3 +117,159 @@ def expected_uplink_time(gains: jax.Array, power: jax.Array, q: jax.Array,
     """E[time] given selection probabilities q — the lambda-weighted term of y0(t)."""
     rate = channel_rate(gains, power, cfg)
     return jnp.sum(q * model_bits / jnp.maximum(rate, 1e-9))
+
+
+# --------------------------------------------------------------------------
+# Channel-model registry.
+#
+# A model is two pure functions over a fixed-shape state (the (2, N) float32
+# in-phase/quadrature field; memoryless models carry zeros):
+#
+#     init(key, sigmas, cfg, **params)        -> state
+#     step(key, state, sigmas, cfg, **params) -> (gains, state)
+#
+# The raw forms below take ``sigmas`` as an operand so the shard_map grid can
+# switch models per config with traced sigma tables; :func:`make_channel`
+# closes over (sigmas, cfg, params) and exposes the clean
+# ``(key, state) -> (gains, state)`` interface the scan engine consumes.
+# --------------------------------------------------------------------------
+
+class ChannelModel(NamedTuple):
+    """A named fading process bound to (sigmas, cfg, params)."""
+
+    name: str
+    init: Callable[[jax.Array], jax.Array]           # key -> state
+    step: Callable[[jax.Array, jax.Array],
+                   Tuple[jax.Array, jax.Array]]      # (key, state) -> (gains, state)
+
+
+def channel_state_zero(n_clients: int) -> jax.Array:
+    """The all-models state shape: (2, N) float32 (I/Q field or zeros)."""
+    return jnp.zeros((2, n_clients), jnp.float32)
+
+
+def _clip_gains(gains: jax.Array, cfg: ChannelConfig) -> jax.Array:
+    lo, hi = cfg.gain_bounds()
+    return jnp.clip(gains, lo, hi)
+
+
+def _rayleigh_init(key, sigmas, cfg):
+    return channel_state_zero(sigmas.shape[0])
+
+
+def _rayleigh_step(key, state, sigmas, cfg):
+    """The paper's model, bit-for-bit :func:`draw_gains` (state untouched)."""
+    return _pin(draw_gains(key, sigmas, cfg)), state
+
+
+def _rician_init(key, sigmas, cfg, k_factor=5.0):
+    return channel_state_zero(sigmas.shape[0])
+
+
+def _rician_step(key, state, sigmas, cfg, k_factor=5.0):
+    """Rician fading: LOS amplitude nu + CN scatter, E[|h|^2] = 2 sigma^2.
+
+    nu^2 = 2 sigma^2 K/(K+1) (specular power), per-component scatter std
+    s = sigma/sqrt(K+1). K -> 0 gives |h|^2 = sigma^2 (x^2 + y^2) with
+    x, y ~ N(0,1) — exactly the Exponential(2 sigma^2) Rayleigh gain.
+    """
+    k = jnp.float32(k_factor)
+    xy = _pin(jax.random.normal(key, (2,) + sigmas.shape, dtype=jnp.float32))
+    nu = sigmas * jnp.sqrt(2.0 * k / (k + 1.0))
+    s = sigmas / jnp.sqrt(k + 1.0)
+    re = nu + s * xy[0]
+    im = s * xy[1]
+    return _pin(_clip_gains(re * re + im * im, cfg)), state
+
+
+def _lognormal_init(key, sigmas, cfg, shadow_db=4.0):
+    return channel_state_zero(sigmas.shape[0])
+
+
+def _lognormal_step(key, state, sigmas, cfg, shadow_db=4.0):
+    """Rayleigh fast fading x log-normal shadowing (shadow_db dB std).
+
+    The shadowing factor 10^(sigma_dB X / 10), X ~ N(0,1), is divided by its
+    mean exp((sigma_dB ln10/10)^2 / 2) so E[|h|^2] stays 2 sigma^2 and the
+    model changes only the gain *spread* relative to plain Rayleigh.
+    """
+    k_ray, k_sh = jax.random.split(key)
+    fast = draw_gains(k_ray, sigmas, cfg)
+    beta = float(shadow_db) * math.log(10.0) / 10.0
+    x = _pin(jax.random.normal(k_sh, sigmas.shape, dtype=jnp.float32))
+    shadow = jnp.exp(beta * x - 0.5 * beta * beta)
+    return _pin(_clip_gains(fast * shadow, cfg)), state
+
+
+def _gauss_markov_init(key, sigmas, cfg, rho=0.9):
+    """Stationary start: g(0) ~ CN(0, 2 sigma^2) per client."""
+    xy = _pin(jax.random.normal(key, (2,) + sigmas.shape, dtype=jnp.float32))
+    return _pin(sigmas[None, :] * xy)
+
+
+def _gauss_markov_step(key, state, sigmas, cfg, rho=0.9):
+    """Complex AR(1) field: g(t) = rho g(t-1) + sqrt(1-rho^2) w(t).
+
+    w ~ CN(0, 2 sigma^2) keeps the stationary gain distribution exactly
+    Exponential(2 sigma^2) (Rayleigh envelope) while the *power* sequence
+    |g(t)|^2 decorrelates as rho^(2 lag) — the Gauss-Markov block-fading
+    model. rho = 0 is i.i.d. Rayleigh; rho -> 1 freezes the channel.
+    """
+    r = jnp.float32(rho)
+    xy = _pin(jax.random.normal(key, state.shape, dtype=jnp.float32))
+    state, w = _pin((state, sigmas[None, :] * xy))
+    new = _pin(r * state + jnp.sqrt(1.0 - r * r) * w)
+    gains = _pin(_clip_gains(new[0] * new[0] + new[1] * new[1], cfg))
+    return gains, new
+
+
+CHANNEL_MODELS = {
+    "rayleigh": (_rayleigh_init, _rayleigh_step),
+    "rician": (_rician_init, _rician_step),
+    "lognormal": (_lognormal_init, _lognormal_step),
+    "gauss_markov": (_gauss_markov_init, _gauss_markov_step),
+}
+
+# Stable ids for lax.switch dispatch (grid runner); insertion order above.
+CHANNEL_IDS = {name: i for i, name in enumerate(CHANNEL_MODELS)}
+
+
+def make_channel(name: str, sigmas: jax.Array, cfg: ChannelConfig,
+                 **params) -> ChannelModel:
+    """Bind a registered fading model to (sigmas, cfg) and extra params.
+
+    Returns a :class:`ChannelModel` whose ``step(key, state)`` is pure and
+    scan/vmap/shard_map-friendly. ``params`` are model-specific Python
+    floats baked in at trace time (``k_factor``, ``shadow_db``, ``rho``).
+    """
+    if name not in CHANNEL_MODELS:
+        raise ValueError(f"unknown channel model {name!r} "
+                         f"(registered: {sorted(CHANNEL_MODELS)})")
+    init_fn, step_fn = CHANNEL_MODELS[name]
+    return ChannelModel(
+        name=name,
+        init=lambda key: init_fn(key, sigmas, cfg, **params),
+        step=lambda key, state: step_fn(key, state, sigmas, cfg, **params),
+    )
+
+
+# Named sigma distributions (Section VI's two mixes), for declarative specs.
+SIGMA_DISTS = {
+    "homogeneous": homogeneous_sigmas,
+    "heterogeneous": heterogeneous_sigmas,
+}
+
+
+def resolve_sigmas(dist, n_clients: int) -> jax.Array:
+    """A named distribution ("homogeneous" | "heterogeneous") or an explicit
+    (N,) array -> concrete per-client Rayleigh scales."""
+    if isinstance(dist, str):
+        if dist not in SIGMA_DISTS:
+            raise ValueError(f"unknown sigma distribution {dist!r} "
+                             f"(registered: {sorted(SIGMA_DISTS)})")
+        return SIGMA_DISTS[dist](n_clients)
+    sig = jnp.asarray(dist, jnp.float32)
+    if sig.shape != (n_clients,):
+        raise ValueError(f"sigma array has shape {sig.shape}, "
+                         f"want ({n_clients},)")
+    return sig

@@ -1,29 +1,55 @@
-"""Additional selection-policy baselines (beyond the paper's uniform).
+"""Selection-policy registry: Algorithm 2 + five baselines, one interface.
 
-The paper compares Algorithm 2 against M-matched uniform selection only.
-These two standard baselines from the client-selection literature make the
-comparison richer (examples + benches use them):
+Every policy is a step
 
-* ``greedy_channel`` — pick the top-M instantaneous channels each round
-  (Nishio & Yonetani [14]-style resource-greedy selection). Fast per round
-  but BIASED: clients with persistently bad channels never participate, so
-  with non-iid data the global model drifts (no 1/q correction exists
-  because q=0 for some clients — exactly the failure mode Theorem 1's
-  non-zero-q condition rules out).
-* ``proportional_gain`` — sample with probability proportional to the
-  clipped gain (normalized to match a target average M), with the
-  Algorithm-1 1/q weighting still applicable since q > 0 for everyone.
+    step(key, gains, state) -> (selected, q, P, state)
 
-Both use P_n = Pbar * N / M' like the paper's uniform baseline, satisfying
-the average-power constraint by construction.
+over a shared fixed-shape :class:`PolicyState` (``z``: Algorithm-2 virtual
+power queues; ``aux``: per-client scratch — update-norm proxy or age; ``t``:
+round counter), so any policy drops into the scan engine, the batched sweep,
+and the shard_map scenario grid unchanged.
+
+Registered policies (see ``docs/paper_map.md`` for the paper map):
+
+* ``proposed`` — Algorithm 2: Lyapunov drift-plus-penalty solve (Theorem 2,
+  Eqs. 16/17) + Bernoulli sampling + Eq. (9) queue update.
+* ``uniform`` — the paper's Section-VI baseline: M-matched uniform selection
+  with P_n = Pbar N / M'.
+* ``greedy_channel`` — top-M instantaneous channels (Nishio & Yonetani
+  [14]-style resource-greedy selection). Fast per round but BIASED: clients
+  with persistently bad channels never participate, so with non-iid data the
+  global model drifts (no 1/q correction exists because q = 0 for some
+  clients — exactly the failure mode Theorem 1's non-zero-q condition rules
+  out).
+* ``proportional_gain`` — Bernoulli sampling with q proportional to the
+  clipped gain (normalized to a target average M), q > 0 everywhere so the
+  Algorithm-1 1/q correction still applies.
+* ``update_aware`` — gradient-norm-weighted selection in the spirit of
+  Amiri et al. (arXiv:2001.10402): clients accumulate local updates while
+  unscheduled, and the scheduler favors large accumulated-update norms. The
+  scheduling layer has no gradients, so ``aux`` carries the standard proxy —
+  the norm estimate grows by one model-update unit per skipped round and
+  resets on transmission.
+* ``aoi_capped`` — age-of-information-capped selection (Yang et al.-style
+  AoI scheduling): every client whose age exceeds ``max_age`` is forced in,
+  remaining slots go to the best instantaneous channels. Deterministic given
+  the gains, q degenerate in {0,1} like ``greedy_channel``.
+
+All baselines use P_n = Pbar * N / M' like the paper's uniform baseline,
+satisfying the average-power constraint by construction.
 """
 
 from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.channel import ChannelConfig
+from repro.core.fences import pin
+from repro.core.scheduler import (SchedulerConfig, sample_selection,
+                                  solve_round, update_queues_z)
 
 
 def greedy_channel(key, gains: jax.Array, m: int, ch: ChannelConfig):
@@ -51,3 +77,184 @@ def proportional_gain(key, gains: jax.Array, m_avg: float,
     m_draw = jnp.maximum(jnp.sum(sel), 1)
     p = jnp.full((n,), ch.p_bar * n / m_draw, jnp.float32)
     return sel, q, p
+
+
+# --------------------------------------------------------------------------
+# Unified policy interface.
+# --------------------------------------------------------------------------
+
+class PolicyState(NamedTuple):
+    """Fixed-shape cross-policy state (same pytree for every policy, so a
+    grid can carry one state and switch policies per config)."""
+
+    z: jax.Array    # (N,) f32: Algorithm-2 virtual power queues (Eq. 9)
+    aux: jax.Array  # (N,) f32: policy scratch (update-norm proxy / AoI age)
+    t: jax.Array    # ()   i32: round counter
+
+
+PolicyStep = Callable[[jax.Array, jax.Array, PolicyState],
+                      Tuple[jax.Array, jax.Array, jax.Array, PolicyState]]
+
+
+def _aux0_zeros(n: int) -> jax.Array:
+    return jnp.zeros((n,), jnp.float32)
+
+
+def _aux0_ones(n: int) -> jax.Array:
+    return jnp.ones((n,), jnp.float32)
+
+
+def _make_proposed(scfg: SchedulerConfig, ch: ChannelConfig, m_avg,
+                   solve_fn) -> PolicyStep:
+    solve = solve_fn or (lambda gains, z: solve_round(gains, z, scfg, ch))
+
+    def step(key, gains, st: PolicyState):
+        q, p = solve(gains, st.z)
+        sel = sample_selection(key, q, scfg.guarantee_one)
+        z = update_queues_z(st.z, q, p, ch)
+        return sel, q, p, PolicyState(z, st.aux, st.t + 1)
+
+    return step
+
+
+def _make_uniform(scfg, ch, m_avg, solve_fn) -> PolicyStep:
+    from repro.core.scheduler import uniform_selection
+
+    def step(key, gains, st: PolicyState):
+        sel, q, p = uniform_selection(key, scfg.n_clients, m_avg, ch)
+        return sel, q, p, PolicyState(st.z, st.aux, st.t + 1)
+
+    return step
+
+
+def _make_greedy(scfg, ch, m_avg, solve_fn) -> PolicyStep:
+    m = max(1, int(round(m_avg)))
+
+    def step(key, gains, st: PolicyState):
+        sel, q, p = greedy_channel(key, gains, m, ch)
+        return sel, q, p, PolicyState(st.z, st.aux, st.t + 1)
+
+    return step
+
+
+def _make_proportional(scfg, ch, m_avg, solve_fn,
+                       q_floor: float = 1e-3) -> PolicyStep:
+    def step(key, gains, st: PolicyState):
+        sel, q, p = proportional_gain(key, gains, m_avg, ch, q_floor)
+        return sel, q, p, PolicyState(st.z, st.aux, st.t + 1)
+
+    return step
+
+
+def _make_update_aware(scfg, ch, m_avg, solve_fn,
+                       q_floor: float = 1e-3) -> PolicyStep:
+    n = scfg.n_clients
+
+    def step(key, gains, st: PolicyState):
+        norms = st.aux  # accumulated-update-norm proxy, grows while skipped
+        q = norms / jnp.maximum(jnp.sum(norms), 1e-12) * m_avg
+        q = jnp.clip(q, q_floor, 1.0)
+        sel = jax.random.uniform(key, (n,)) < q
+        m_draw = jnp.maximum(jnp.sum(sel), 1)
+        p = jnp.full((n,), ch.p_bar * n / m_draw, jnp.float32)
+        aux = jnp.where(sel, 1.0, norms + 1.0)
+        return sel, q, p, PolicyState(st.z, aux, st.t + 1)
+
+    return step
+
+
+def _make_aoi_capped(scfg, ch, m_avg, solve_fn,
+                     max_age: Optional[int] = None) -> PolicyStep:
+    n = scfg.n_clients
+    m = max(1, int(round(m_avg)))
+    if max_age is None:
+        # default cap: twice the uniform-selection revisit time N/M
+        max_age = max(2, int(round(2.0 * n / m)))
+    cap = jnp.float32(max_age)
+    _FORCE = jnp.float32(1e30)  # above any clipped gain
+
+    def step(key, gains, st: PolicyState):
+        age = st.aux
+        forced = age >= cap
+        # forced clients all share the same top score; the `| forced` union
+        # below is what guarantees every one of them is selected even when
+        # there are more than m of them
+        score = jnp.where(forced, _FORCE, gains)
+        thresh = -jnp.sort(-score)[m - 1]
+        sel = (score >= thresh) | forced
+        q = sel.astype(jnp.float32)  # degenerate, like greedy_channel
+        m_draw = jnp.maximum(jnp.sum(sel), 1)
+        p = jnp.full((n,), ch.p_bar * n / m_draw, jnp.float32)
+        aux = jnp.where(sel, 0.0, age + 1.0)
+        return sel, q, p, PolicyState(st.z, aux, st.t + 1)
+
+    return step
+
+
+# name -> (builder, aux-initializer, needs matched-M?)
+POLICIES = {
+    "proposed": (_make_proposed, _aux0_zeros, False),
+    "uniform": (_make_uniform, _aux0_zeros, True),
+    "greedy_channel": (_make_greedy, _aux0_zeros, True),
+    "proportional_gain": (_make_proportional, _aux0_zeros, True),
+    "update_aware": (_make_update_aware, _aux0_ones, True),
+    "aoi_capped": (_make_aoi_capped, _aux0_zeros, True),
+}
+
+# Stable ids for lax.switch dispatch and sweep flags; insertion order above
+# (the first two match the engine's historical {proposed: 0, uniform: 1}).
+POLICY_IDS = {name: i for i, name in enumerate(POLICIES)}
+
+
+def init_policy_state(name: str, n_clients: int) -> PolicyState:
+    """Fresh per-policy state (zero queues; aux per the policy's semantics)."""
+    _, aux0, _ = _lookup(name)
+    return PolicyState(z=jnp.zeros((n_clients,), jnp.float32),
+                       aux=aux0(n_clients), t=jnp.zeros((), jnp.int32))
+
+
+def policy_aux_init(name: str, n_clients: int) -> jax.Array:
+    """Just the aux initializer — grids stack these into a (P, N) table."""
+    return _lookup(name)[1](n_clients)
+
+
+def _lookup(name: str):
+    if name not in POLICIES:
+        raise ValueError(f"unknown policy {name!r} "
+                         f"(registered: {sorted(POLICIES)})")
+    return POLICIES[name]
+
+
+def make_policy(name: str, scfg: SchedulerConfig, ch: ChannelConfig, *,
+                m_avg: float = 0.0, solve_fn=None, **params) -> PolicyStep:
+    """Bind a registered policy to its configuration.
+
+    ``m_avg`` is the matched average participation level M (Section VI);
+    required (> 0) by every baseline, ignored by ``proposed``. ``solve_fn``
+    optionally overrides the Theorem-2 solve (e.g. the Pallas kernel) for
+    ``proposed``. Extra ``params`` are policy-specific (``q_floor``,
+    ``max_age``).
+    """
+    builder, _, needs_m = _lookup(name)
+    if needs_m and not m_avg > 0.0:
+        raise ValueError(f"policy {name!r} needs m_avg > 0 (matched average "
+                         f"participation), got {m_avg!r}")
+    return _fence(builder(scfg, ch, m_avg, solve_fn, **params))
+
+
+def _fence(step: PolicyStep) -> PolicyStep:
+    """Pin a policy step's inputs and outputs into a closed fusion region.
+
+    The scenario grid runs a policy step inside a much larger program than
+    a single-config run does, and XLA fuses/hoists across the step boundary
+    differently per surrounding program — worth ~1 ulp of f32 drift per
+    round. Fencing the step in every context (make_policy is the single
+    entry point) keeps the interior graph identical everywhere, which the
+    grid's bitwise-parity contract with run_simulation_scan depends on
+    (tests/test_grid.py).
+    """
+    def fenced(key, gains, st):
+        key, gains, st = pin((key, gains, st))
+        return pin(step(key, gains, st))
+
+    return fenced

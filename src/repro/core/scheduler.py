@@ -27,7 +27,7 @@ the per-client solve is local, mirroring the paper's distributed computation.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,7 +70,8 @@ def init_state(cfg: SchedulerConfig) -> SchedulerState:
 def _objective(q, p, gains, z, cfg: SchedulerConfig, ch: ChannelConfig):
     """Per-client drift-plus-penalty objective f(q, P) of Eq. (15)."""
     rate = channel_rate(gains, p, ch)
-    y0 = 1.0 / (cfg.n_clients * q) + cfg.lam * cfg.model_bits * q / jnp.maximum(rate, _EPS)
+    y0 = (1.0 / (cfg.n_clients * q)
+          + cfg.lam * cfg.model_bits * q / jnp.maximum(rate, _EPS))
     return cfg.V * y0 + z * (p * q - ch.p_bar)
 
 
@@ -119,11 +120,21 @@ def solve_round(gains: jax.Array, z: jax.Array, cfg: SchedulerConfig,
     return q, p
 
 
+def update_queues_z(z: jax.Array, q: jax.Array, p: jax.Array,
+                    ch: ChannelConfig) -> jax.Array:
+    """Eq. (9) on the bare queue array: max(Z + P q - Pbar, 0).
+
+    The single home of the queue dynamics — the SchedulerState form below
+    and the policy registry's PolicyState form both delegate here.
+    """
+    return jnp.maximum(z + p * q - ch.p_bar, 0.0)
+
+
 def update_queues(state: SchedulerState, q: jax.Array, p: jax.Array,
                   ch: ChannelConfig) -> SchedulerState:
     """Eq. (9): Z(t+1) = max(Z + P q - Pbar, 0)."""
-    z = jnp.maximum(state.z + p * q - ch.p_bar, 0.0)
-    return SchedulerState(z=z, t=state.t + 1)
+    return SchedulerState(z=update_queues_z(state.z, q, p, ch),
+                          t=state.t + 1)
 
 
 def sample_selection(key: jax.Array, q: jax.Array,
@@ -182,23 +193,33 @@ def uniform_selection(key: jax.Array, n_clients: int, m_avg: float,
 
 
 def estimate_avg_selected(key: jax.Array, sigmas: jax.Array, cfg: SchedulerConfig,
-                          ch: ChannelConfig, rounds: int = 500) -> jax.Array:
+                          ch: ChannelConfig, rounds: int = 500,
+                          channel=None) -> jax.Array:
     """Monte-Carlo estimate of M = E[sum_n q_n] under Algorithm 2.
 
     Used to match the uniform baseline's participation level (Section VI).
     Runs the real queue dynamics so the estimate reflects steady state.
+    ``channel`` is an optional :class:`~repro.core.channel.ChannelModel`
+    whose fading law the estimate should reflect (default: the paper's
+    i.i.d. Rayleigh draws) — matching against the wrong gain distribution
+    would silently skew every "M-matched" baseline comparison.
     """
     from repro.core.channel import draw_gains  # local import to avoid cycle
 
     def body(carry, k):
-        st = carry
-        gains = draw_gains(k, sigmas, ch)
+        st, ch_state = carry
+        if channel is None:
+            gains = draw_gains(k, sigmas, ch)
+        else:
+            gains, ch_state = channel.step(k, ch_state)
         q, p = solve_round(gains, st.z, cfg, ch)
         st = update_queues(st, q, p, ch)
-        return st, jnp.sum(q)
+        return (st, ch_state), jnp.sum(q)
 
+    ch_state0 = (jnp.zeros((0,), jnp.float32) if channel is None
+                 else channel.init(jax.random.fold_in(key, 1)))
     keys = jax.random.split(key, rounds)
-    _, sums = jax.lax.scan(body, init_state(cfg), keys)
+    _, sums = jax.lax.scan(body, (init_state(cfg), ch_state0), keys)
     # Discard burn-in (first 20%) — queues start at 0.
     burn = rounds // 5
     return jnp.mean(sums[burn:])

@@ -18,11 +18,9 @@ which is what the time-to-accuracy comparisons (Figs. 2-4) need.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass

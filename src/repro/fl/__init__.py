@@ -4,6 +4,7 @@
 # change without breaking the public API.
 from repro.fl.engine import (SimConfig, make_solve_fn, run_simulation_scan,
                              run_sweep)
+from repro.fl.grid import GridSpec, run_grid
 from repro.fl.round import (fl_round, local_sgd, make_fl_train_step,
                             make_train_step, weighted_aggregate)
 from repro.fl.simulation import (match_uniform_m, run_simulation,
@@ -12,5 +13,6 @@ from repro.fl.simulation import (match_uniform_m, run_simulation,
 __all__ = ["fl_round", "local_sgd", "make_fl_train_step", "make_train_step",
            "weighted_aggregate",
            "SimConfig", "make_solve_fn",
+           "GridSpec", "run_grid",
            "run_simulation", "run_simulation_loop", "run_simulation_scan",
            "run_sweep", "match_uniform_m", "time_to_accuracy"]

@@ -4,21 +4,31 @@ The legacy engine (`repro.fl.simulation.run_simulation_loop`) drives every
 round from a Python ``for`` loop: one jit dispatch per round plus a blocking
 ``float(t_comm)`` host sync, so at N=3597 FEMNIST scale the wall clock is
 dominated by dispatch, not math. This module replaces the driver with
-``jax.lax.scan``:
+``jax.lax.scan`` and generalizes the round over the channel/policy
+registries (``repro.core.channel``, ``repro.core.policies``):
 
-* ``run_simulation`` scans ``sim_round`` over *eval-interval chunks*. All
-  per-round accounting (cumulative comm time, cumulative power, selection
-  count) lives in device-resident carry scalars; the host sees one small
-  tuple per eval point. Chunk lengths take at most three distinct values
-  (1, ``eval_every``, tail), so jit compiles at most three variants.
+* ``run_simulation`` runs the whole trajectory in ONE jitted call
+  (:func:`run_config_chunks`): a 1-round chunk for the round-0 eval, a
+  single ``lax.scan`` over the full ``eval_every``-round chunks, and a tail
+  chunk — so at most three scan bodies compile regardless of length, all
+  per-round accounting stays device-resident, and the host transfers four
+  small arrays at the end. ``SimConfig.channel`` / ``SimConfig.policy``
+  pick any registered fading model and selection policy.
 * ``run_sweep`` vmaps the channel -> schedule -> select path over a batch of
-  (policy, lambda, V, seed) configurations and scans all rounds in ONE
-  compiled call — the Fig. 2-5-style policy comparison (comm time, power,
-  participation) without re-tracing per configuration.
+  seeds per policy and scans all rounds in ONE compiled call per policy —
+  the Fig. 2-5-style comparison (comm time, power, participation) without
+  re-tracing per configuration, and without a mixed-policy body that pays
+  for branches it discards (each per-policy runner is pruned to exactly
+  that policy's ops).
 * ``make_solve_fn`` is the Theorem-2 solve behind a ``solver`` switch:
   ``"jnp"`` is the vectorized closed form from ``repro.core.scheduler``;
   ``"pallas"`` is the tiled VPU kernel from ``repro.kernels``, with
   ``interpret`` auto-selected off-TPU so the same config runs everywhere.
+
+The multi-scenario grid (channel x sigma-distribution x policy x seed in a
+single ``shard_map`` call across devices) lives in ``repro.fl.grid`` and is
+built from the same round core (:func:`make_round_core`), so per-config grid
+trajectories match :func:`run_simulation_scan` bit for bit.
 
 Round math is deliberately NOT shared with the legacy loop engine — the
 parity test (tests/test_engine.py) checks two independent implementations
@@ -35,13 +45,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ChannelConfig, SchedulerConfig, SchedulerState,
-                        channel_rate, draw_gains, estimate_avg_selected,
-                        init_state, sample_selection, solve_round,
-                        uniform_selection, update_queues)
+from repro.core import (ChannelConfig, SchedulerConfig, channel_rate,
+                        estimate_avg_selected, init_policy_state,
+                        make_channel, make_policy)
+from repro.core.policies import POLICY_IDS  # noqa: F401  (re-exported)
 from repro.data.synthetic import FederatedDataset
 from repro.fl.round import local_sgd
 from repro.models.cnn import apply_cnn, cnn_loss
+
+# fold_in tag consumed by stateful channel inits (keeps the round-key chain
+# identical to the stateless models', so rayleigh trajectories are unchanged)
+CHANNEL_INIT_TAG = 0x6368  # "ch"
 
 
 @dataclasses.dataclass
@@ -55,12 +69,15 @@ class SimConfig:
     m_cap: int = 32              # max simulated participants per round
     eval_every: int = 10
     eval_size: int = 2000
-    policy: str = "proposed"     # proposed | uniform
+    policy: str = "proposed"     # any repro.core.policies.POLICIES name
     aggregation: str = "paper"   # paper (Alg.1 l.7) | delta (variance-reduced)
-    uniform_m: float = 0.0       # matched M for the uniform baseline
+    uniform_m: float = 0.0       # matched M for the baseline policies
     seed: int = 0
     engine: str = "scan"         # scan (compiled chunks) | loop (legacy)
     solver: str = "jnp"          # jnp closed form | pallas kernel
+    channel: str = "rayleigh"    # any repro.core.channel.CHANNEL_MODELS name
+    channel_params: tuple = ()   # ((name, value), ...) model extras
+    policy_params: tuple = ()    # ((name, value), ...) policy extras
 
 
 # --------------------------------------------------------------------------
@@ -76,6 +93,7 @@ def make_solve_fn(scfg: SchedulerConfig, ch: ChannelConfig,
     interpret mode elsewhere (override with ``interpret``).
     """
     if solver == "jnp":
+        from repro.core import solve_round
         return lambda gains, z: solve_round(gains, z, scfg, ch)
     if solver != "pallas":
         raise ValueError(f"unknown solver {solver!r} (want 'jnp'|'pallas')")
@@ -115,33 +133,44 @@ def _aggregate(params, updated, sel_valid, q_sel, n_clients, aggregation):
     return jax.tree.map(agg, updated)
 
 
-def make_sim_round(ds: FederatedDataset, sim: SimConfig,
-                   scfg: SchedulerConfig, ch: ChannelConfig,
-                   sigmas: jax.Array, solve_fn=None):
-    """Build ``sim_round(params, sched_state, key)`` — pure, scan-able.
+def make_round_core(ds: FederatedDataset, sim: SimConfig,
+                    scfg: SchedulerConfig):
+    """The channel/policy-agnostic round body shared by the scan engine and
+    the shard_map grid.
 
-    Returns ``(params, sched_state, t_comm, power, n_selected)``. Mirrors the
-    legacy engine's round exactly (same key-split order, same comm-time and
-    power accounting) so scan and loop trajectories agree to float32.
+    Returns ``round_core(channel_step, policy_step, rate_cfg, params,
+    pol_state, ch_state, key) -> (params, pol_state, ch_state, t_comm,
+    power, n_sel)`` where ``channel_step(key, state) -> (gains, state)`` and
+    ``policy_step(key, gains, state) -> (sel, q, p, state)`` come from the
+    registries (bound per cell by the grid). Key-split order and all
+    accounting mirror the legacy engine exactly, so grid, scan, and loop
+    trajectories agree on common configurations.
     """
     n = ds.n_clients
     m_cap = sim.m_cap
-    solve = solve_fn or make_solve_fn(scfg, ch, sim.solver)
 
-    def sim_round(params, sched_state, key):
+    def round_core(channel_step, policy_step, rate_cfg, params, pol_state,
+                   ch_state, key):
         k_ch, k_sel, k_bat = jax.random.split(key, 3)
-        gains = draw_gains(k_ch, sigmas, ch)
-        if sim.policy == "proposed":
-            q, p = solve(gains, sched_state.z)
-            sel = sample_selection(k_sel, q, scfg.guarantee_one)
-            sched_state = update_queues(sched_state, q, p, ch)
-        else:
-            sel, q, p = uniform_selection(k_sel, n, sim.uniform_m, ch)
-        # comm time: TDMA sum over selected (Eq. 8 denominator)
-        rate = channel_rate(gains, p, ch)
-        t_comm = jnp.sum(jnp.where(sel, scfg.model_bits
-                                   / jnp.maximum(rate, 1e-9), 0.0))
-        power = jnp.sum(p * q)  # sum_n E[P_n q_n] this round
+        gains, ch_state = channel_step(k_ch, ch_state)
+        # The barriers pin the step outputs so the consumer chains below
+        # (rate/log2, the training gather) cannot fuse INTO the step
+        # computations — XLA makes that choice per surrounding program,
+        # which would drift f32 results by a ulp per round and break the
+        # grid <-> run_simulation_scan bitwise contract (tests/test_grid.py).
+        gains, ch_state = jax.lax.optimization_barrier((gains, ch_state))
+        sel, q, p, pol_state = jax.lax.optimization_barrier(
+            policy_step(k_sel, gains, pol_state))
+        # comm time: TDMA sum over selected (Eq. 8 denominator); power is
+        # sum_n E[P_n q_n] this round. The accounting island is fenced on
+        # both sides for the same reason as the step outputs above (its
+        # log2 chain otherwise fuses with whatever the surrounding program
+        # offers, e.g. differently per per-device config count).
+        rate = channel_rate(gains, p, rate_cfg)
+        t_comm, power = jax.lax.optimization_barrier(
+            (jnp.sum(jnp.where(sel, scfg.model_bits
+                               / jnp.maximum(rate, 1e-9), 0.0)),
+             jnp.sum(p * q)))
         # pick up to m_cap participants (nonzero packs left)
         sel_idx = jnp.nonzero(sel, size=m_cap, fill_value=0)[0]
         sel_valid = jnp.arange(m_cap) < jnp.sum(sel)
@@ -158,7 +187,32 @@ def make_sim_round(ds: FederatedDataset, sim: SimConfig,
                                 sim.local_steps), (imgs, labs))
         new_params = _aggregate(params, updated, sel_valid, q_sel, n,
                                 sim.aggregation)
-        return new_params, sched_state, t_comm, power, jnp.sum(sel)
+        return (new_params, pol_state, ch_state, t_comm, power,
+                jnp.sum(sel))
+
+    return round_core
+
+
+def make_sim_round(ds: FederatedDataset, sim: SimConfig,
+                   scfg: SchedulerConfig, ch: ChannelConfig,
+                   sigmas: jax.Array, solve_fn=None):
+    """Bind :func:`make_round_core` to one concrete channel model + policy.
+
+    Returns ``sim_round(params, pol_state, ch_state, key)``— pure,
+    scan-able. The channel comes from ``sim.channel`` / ``sim.channel_params``
+    and the policy from ``sim.policy`` (matched M = ``sim.uniform_m``), both
+    resolved through the registries.
+    """
+    solve = solve_fn or make_solve_fn(scfg, ch, sim.solver)
+    channel = make_channel(sim.channel, sigmas, ch,
+                           **dict(sim.channel_params))
+    policy_step = make_policy(sim.policy, scfg, ch, m_avg=sim.uniform_m,
+                              solve_fn=solve, **dict(sim.policy_params))
+    round_core = make_round_core(ds, sim, scfg)
+
+    def sim_round(params, pol_state, ch_state, key):
+        return round_core(channel.step, policy_step, ch, params, pol_state,
+                          ch_state, key)
 
     return sim_round
 
@@ -173,6 +227,33 @@ def eval_rounds(rounds: int, eval_every: int) -> list:
 # Scan engine.
 # --------------------------------------------------------------------------
 
+def make_eval_fn(ds: FederatedDataset, sim: SimConfig):
+    """Test-set accuracy on the (static) eval slice."""
+    ev_imgs = ds.test_images[: sim.eval_size]
+    ev_labels = ds.test_labels[: sim.eval_size]
+
+    def eval_fn(params):
+        logits = apply_cnn(params, ev_imgs)
+        return jnp.mean(jnp.argmax(logits, -1) == ev_labels)
+
+    return eval_fn
+
+
+def scan_chunk(sim_round, eval_fn, carry, n_rounds: int):
+    """Scan ``sim_round`` ``n_rounds`` times and evaluate — the chunk body
+    shared (traced inline) by :func:`make_chunk_runner` and the grid."""
+
+    def body(c, _):
+        params, pst, cst, key, t_cum, p_cum = c
+        key, k = jax.random.split(key)
+        params, pst, cst, t_comm, power, nsel = sim_round(params, pst, cst,
+                                                          k)
+        return (params, pst, cst, key, t_cum + t_comm, p_cum + power), nsel
+
+    carry, nsel = jax.lax.scan(body, carry, None, length=n_rounds)
+    return carry, eval_fn(carry[0]), nsel[-1]
+
+
 def make_chunk_runner(ds: FederatedDataset, sim: SimConfig,
                       scfg: SchedulerConfig, ch: ChannelConfig,
                       sigmas: jax.Array, solve_fn=None):
@@ -181,38 +262,117 @@ def make_chunk_runner(ds: FederatedDataset, sim: SimConfig,
     ``run_chunk(carry, n_rounds)`` scans ``sim_round`` ``n_rounds`` times
     (static, so at most a few compiled variants), evaluates test accuracy on
     the resulting params, and returns ``(carry, acc, last_n_selected)``.
-    ``carry = (params, sched_state, key, t_comm_cum, power_cum)`` and is
-    donated — all accounting stays device-resident between eval points.
+    ``carry = (params, pol_state, ch_state, key, t_comm_cum, power_cum)``
+    and is donated — all accounting stays device-resident between eval
+    points.
 
     Exposed separately from :func:`run_simulation_scan` so callers that
     drive many simulations (benchmarks, sweeps over checkpoints) can build
     once, warm each chunk length, and reuse the compiled function.
     """
     sim_round = make_sim_round(ds, sim, scfg, ch, sigmas, solve_fn)
-    ev_imgs = ds.test_images[: sim.eval_size]
-    ev_labels = ds.test_labels[: sim.eval_size]
+    eval_fn = make_eval_fn(ds, sim)
 
     @functools.partial(jax.jit, static_argnames=("n_rounds",),
                        donate_argnums=(0,))
     def run_chunk(carry, n_rounds):
-        def body(c, _):
-            params, st, key, t_cum, p_cum = c
-            key, k = jax.random.split(key)
-            params, st, t_comm, power, nsel = sim_round(params, st, k)
-            return (params, st, key, t_cum + t_comm, p_cum + power), nsel
-
-        carry, nsel = jax.lax.scan(body, carry, None, length=n_rounds)
-        logits = apply_cnn(carry[0], ev_imgs)
-        acc = jnp.mean(jnp.argmax(logits, -1) == ev_labels)
-        return carry, acc, nsel[-1]
+        return scan_chunk(sim_round, eval_fn, carry, n_rounds)
 
     return run_chunk
 
 
-def init_carry(key, params, scfg: SchedulerConfig):
-    """Fresh scan-engine carry (copies params: chunks donate their input)."""
-    return (jax.tree.map(jnp.array, params), init_state(scfg), key,
+def init_carry(key, params, scfg: SchedulerConfig, sim: SimConfig, sigmas,
+               ch: ChannelConfig):
+    """Fresh scan-engine carry (copies params: chunks donate their input).
+
+    The policy state and channel model come from the same ``sim`` /
+    ``sigmas`` / ``ch`` the chunk runner was built with — they are required
+    so a stateful fading model (e.g. ``gauss_markov``) always gets its
+    stationary init instead of a silently-wrong zero state. The channel
+    init consumes ``fold_in(key, CHANNEL_INIT_TAG)``, a side-channel of
+    the main key, so memoryless models leave the round-key chain untouched.
+    """
+    channel = make_channel(sim.channel, sigmas, ch,
+                           **dict(sim.channel_params))
+    return (jax.tree.map(jnp.array, params),
+            init_policy_state(sim.policy, scfg.n_clients),
+            channel.init(jax.random.fold_in(key, CHANNEL_INIT_TAG)), key,
             jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+
+
+def run_config_chunks(sim_round, eval_fn, rounds: int, eval_every: int,
+                      params, pol_state, ch_state, key):
+    """The whole-trajectory chunk schedule, traced into ONE program.
+
+    Chunk structure: a 1-round chunk (eval at round 0), then a single
+    ``lax.scan`` over the full ``eval_every``-round chunks, then the tail
+    chunk if the final round is not on the eval stride — so at most three
+    scan bodies compile regardless of trajectory length, matching
+    :func:`eval_rounds` exactly. Returns stacked per-eval-point arrays
+    ``(comm_cum, test_acc, power_cum, n_selected)``, each (E,).
+
+    This function is THE per-config program of both
+    :func:`run_simulation_scan` and the shard_map grid
+    (``repro.fl.grid``) — sharing the trace end to end is what makes grid
+    trajectories bitwise-equal to per-config runs (XLA fuses structurally
+    different programs differently, drifting f32 results by ulps).
+    """
+    carry = (params, pol_state, ch_state, key,
+             jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    carry, acc0, ns0 = scan_chunk(sim_round, eval_fn, carry, 1)
+    first = (carry[4], acc0, carry[5], ns0)
+    n_full = (rounds - 1) // eval_every
+    parts = [jax.tree.map(lambda x: x[None], first)]
+    if n_full > 0:
+        def outer(c, _):
+            c, acc, nsel = scan_chunk(sim_round, eval_fn, c, eval_every)
+            return c, (c[4], acc, c[5], nsel)
+
+        carry, mids = jax.lax.scan(outer, carry, None, length=n_full)
+        parts.append(mids)
+    tail = (rounds - 1) - n_full * eval_every
+    if tail > 0:
+        carry, acc_t, ns_t = scan_chunk(sim_round, eval_fn, carry, tail)
+        parts.append(jax.tree.map(lambda x: x[None],
+                                  (carry[4], acc_t, carry[5], ns_t)))
+    return tuple(jnp.concatenate([p[i] for p in parts])
+                 for i in range(4))
+
+
+def make_config_runner(ds: FederatedDataset, sim: SimConfig,
+                       scfg: SchedulerConfig, ch: ChannelConfig,
+                       sigmas: jax.Array, solve_fn=None):
+    """Jit the full single-config trajectory: ``runner(params, key) ->
+    (comm_cum, test_acc, power_cum, n_selected)``, each (E,)."""
+    sim_round = make_sim_round(ds, sim, scfg, ch, sigmas, solve_fn)
+    eval_fn = make_eval_fn(ds, sim)
+    channel = make_channel(sim.channel, sigmas, ch,
+                           **dict(sim.channel_params))
+    n = scfg.n_clients
+
+    @jax.jit
+    def runner(params, key):
+        pol0 = init_policy_state(sim.policy, n)
+        ch0 = channel.init(jax.random.fold_in(key, CHANNEL_INIT_TAG))
+        return run_config_chunks(sim_round, eval_fn, sim.rounds,
+                                 sim.eval_every, params, pol0, ch0, key)
+
+    return runner
+
+
+def history_from_trajectory(rounds: int, eval_every: int, n_clients: int,
+                            comm, acc, pcum, nsel) -> Dict[str, np.ndarray]:
+    """Per-eval-point device arrays -> the engines' history dict layout
+    (float64 host math for avg_power, as the legacy loop computes it)."""
+    ev = np.asarray(eval_rounds(rounds, eval_every))
+    return {
+        "round": ev,
+        "comm_time": np.asarray(comm).astype(np.float64),
+        "test_acc": np.asarray(acc).astype(np.float64),
+        "avg_power": (np.asarray(pcum).astype(np.float64)
+                      / (ev + 1) / n_clients),
+        "n_selected": np.asarray(nsel).astype(np.int64),
+    }
 
 
 def run_simulation_scan(key, params, ds: FederatedDataset, sim: SimConfig,
@@ -220,101 +380,69 @@ def run_simulation_scan(key, params, ds: FederatedDataset, sim: SimConfig,
                         sigmas: jax.Array) -> Dict[str, np.ndarray]:
     """Scan-compiled drop-in for the legacy ``run_simulation`` loop.
 
-    Rounds between eval points run inside one ``lax.scan`` per chunk with all
-    accounting device-resident; the host transfers four scalars per eval
-    point instead of two per round. History layout (round / comm_time /
-    test_acc / avg_power / n_selected) matches the legacy engine.
+    The whole trajectory — every eval-interval chunk — runs in ONE jitted
+    call with all accounting device-resident; the host transfers four small
+    arrays at the end instead of two scalars per round. History layout
+    (round / comm_time / test_acc / avg_power / n_selected) matches the
+    legacy engine. Any registered channel model and policy is accepted
+    (the legacy loop knows only rayleigh + proposed/uniform).
     """
-    n = ds.n_clients
-    run_chunk = make_chunk_runner(ds, sim, scfg, ch, sigmas)
-    carry = init_carry(key, params, scfg)
-    hist = {k: [] for k in ("round", "comm_time", "test_acc", "avg_power",
-                            "n_selected")}
-    prev = -1
-    for r in eval_rounds(sim.rounds, sim.eval_every):
-        carry, acc, nsel = run_chunk(carry, n_rounds=r - prev)
-        prev = r
-        hist["round"].append(r)
-        hist["comm_time"].append(float(carry[3]))
-        hist["test_acc"].append(float(acc))
-        hist["avg_power"].append(float(carry[4]) / (r + 1) / n)
-        hist["n_selected"].append(int(nsel))
-    return {k: np.asarray(v) for k, v in hist.items()}
+    runner = make_config_runner(ds, sim, scfg, ch, sigmas)
+    comm, acc, pcum, nsel = runner(params, key)
+    return history_from_trajectory(sim.rounds, sim.eval_every,
+                                   ds.n_clients, comm, acc, pcum, nsel)
 
 
 # --------------------------------------------------------------------------
-# Policy x seed sweep: the Fig. 2-5 comparison in one compiled call.
+# Policy x seed sweep: the Fig. 2-5 comparison, one compiled call per policy.
 # --------------------------------------------------------------------------
-
-POLICY_IDS = {"proposed": 0, "uniform": 1}
-
 
 def make_sweep_runner(sigmas: jax.Array, scfg: SchedulerConfig,
                       ch: ChannelConfig, *, rounds: int,
-                      policies: Sequence[str] = ("proposed", "uniform"),
-                      solver: str = "jnp", guarantee_one: bool = True):
-    """Build the jitted batched scheduling-trajectory function.
+                      policy: str = "proposed", m_avg: float = 1.0,
+                      channel: str = "rayleigh", channel_params: tuple = (),
+                      solver: str = "jnp", guarantee_one: bool = True,
+                      policy_params: Optional[dict] = None):
+    """Build the jitted batched scheduling-trajectory function for ONE policy.
 
-    Returns ``runner(seed_keys, flags, uniform_m)`` mapping a (C, 2) batch of
-    PRNG keys, a (C,) batch of policy ids (see :data:`POLICY_IDS`) and the
-    matched-M scalar to per-config trajectories ``(comm_cum, power,
-    avg_power, n_selected)``, each (C, rounds). The whole channel -> solve ->
-    select -> account chain compiles into one scan body, so XLA fuses the
-    elementwise work and per-round dispatch disappears.
+    Returns ``runner(seed_keys)`` mapping a (S, 2) batch of PRNG keys to
+    per-seed trajectories ``(comm_cum, power, avg_power, n_selected)``, each
+    (S, rounds). The whole channel -> solve -> select -> account chain
+    compiles into one scan body, so XLA fuses the elementwise work and
+    per-round dispatch disappears.
 
-    Policy branches not named in ``policies`` are pruned statically — a
-    proposed-only sweep never pays the uniform baseline's O(N log N) sort.
+    One runner per policy (rather than a flag-switched mixed body) means a
+    config never computes a branch it discards — a proposed-only sweep never
+    pays the uniform baseline's O(N log N) sort, and vice versa.
     """
     n = scfg.n_clients
-    unknown = [p for p in policies if p not in POLICY_IDS]
-    if unknown:
-        raise ValueError(f"unknown policies {unknown}")
-    need_prop = "proposed" in policies
-    need_unif = "uniform" in policies
-    solve = make_solve_fn(scfg, ch, solver)
+    scfg_run = dataclasses.replace(scfg, guarantee_one=guarantee_one)
+    solve = make_solve_fn(scfg_run, ch, solver)
+    chan = make_channel(channel, sigmas, ch, **dict(channel_params))
+    step = make_policy(policy, scfg_run, ch, m_avg=m_avg, solve_fn=solve,
+                       **(policy_params or {}))
 
-    def one_config(cfg_key, flag, m_match):
-        is_prop = flag == 0
-
-        def body(st: SchedulerState, k):
+    def one_seed(cfg_key):
+        def body(carry, k):
+            pst, cst = carry
             k_ch, k_sel = jax.random.split(k)
-            gains = draw_gains(k_ch, sigmas, ch)
-            if need_prop:
-                q_p, p_p = solve(gains, st.z)
-                sel_p = sample_selection(k_sel, q_p, guarantee_one)
-            if need_unif:
-                sel_u, q_u, p_u = uniform_selection(k_sel, n, m_match, ch)
-            if need_prop and need_unif:
-                sel = jnp.where(is_prop, sel_p, sel_u)
-                q = jnp.where(is_prop, q_p, q_u)
-                p = jnp.where(is_prop, p_p, p_u)
-            elif need_prop:
-                sel, q, p = sel_p, q_p, p_p
-            else:
-                sel, q, p = sel_u, q_u, p_u
-            if need_prop:
-                # queues advance only under Algorithm 2 (uniform satisfies
-                # the power budget by construction: P = Pbar N / M')
-                new_st = update_queues(st, q_p, p_p, ch)
-                z = jnp.where(is_prop, new_st.z, st.z) if need_unif \
-                    else new_st.z
-            else:
-                z = st.z
+            gains, cst = chan.step(k_ch, cst)
+            sel, q, p, pst = step(k_sel, gains, pst)
             rate = channel_rate(gains, p, ch)
             t_comm = jnp.sum(jnp.where(sel, scfg.model_bits
                                        / jnp.maximum(rate, 1e-9), 0.0))
             power = jnp.sum(p * q)
-            return SchedulerState(z=z, t=st.t + 1), (t_comm, power,
-                                                     jnp.sum(sel))
+            return (pst, cst), (t_comm, power, jnp.sum(sel))
 
+        cst0 = chan.init(jax.random.fold_in(cfg_key, CHANNEL_INIT_TAG))
         round_keys = jax.random.split(cfg_key, rounds)
-        _, (t_comm, power, nsel) = jax.lax.scan(body, init_state(scfg),
-                                                round_keys)
+        _, (t_comm, power, nsel) = jax.lax.scan(
+            body, (init_policy_state(policy, n), cst0), round_keys)
         denom = jnp.arange(1, rounds + 1, dtype=jnp.float32)
         return (jnp.cumsum(t_comm), power, jnp.cumsum(power) / denom / n,
                 nsel)
 
-    return jax.jit(jax.vmap(one_config, in_axes=(0, 0, None)))
+    return jax.jit(jax.vmap(one_seed))
 
 
 def run_sweep(key, sigmas: jax.Array, scfg: SchedulerConfig,
@@ -322,13 +450,17 @@ def run_sweep(key, sigmas: jax.Array, scfg: SchedulerConfig,
               policies: Sequence[str] = ("proposed", "uniform"),
               seeds: Sequence[int] = (0,), uniform_m: Optional[float] = None,
               solver: str = "jnp", guarantee_one: bool = True,
-              match_rounds: int = 300) -> Dict[str, np.ndarray]:
+              match_rounds: int = 300, channel: str = "rayleigh",
+              channel_params: tuple = (),
+              policy_params: Optional[Dict[str, dict]] = None
+              ) -> Dict[str, np.ndarray]:
     """Batched channel -> schedule -> select sweep over policies x seeds.
 
-    Every configuration's full ``rounds``-round trajectory — Rayleigh draws,
-    Theorem-2 solve (or M-matched uniform), Bernoulli selection, Eq. (9)
-    queue updates, TDMA comm-time and power accounting — runs under one
-    ``jit(vmap(scan))``. Model training is excluded (that is
+    Every configuration's full ``rounds``-round trajectory — fading draws
+    (any registered ``channel``), the policy's selection rule, Eq. (9)
+    queue updates where applicable, TDMA comm-time and power accounting —
+    runs under one ``jit(vmap(scan))`` per policy, each pruned to exactly
+    that policy's ops. Model training is excluded (that is
     ``run_simulation``'s job); this is the scheduling-layer comparison behind
     the comm-time / power / participation axes of Figs. 2-5.
 
@@ -337,34 +469,47 @@ def run_sweep(key, sigmas: jax.Array, scfg: SchedulerConfig,
     ``avg_power`` (running mean of sum P q / N, the Fig. 5 trajectory),
     ``n_selected``, plus the scalar ``uniform_m`` used for matching.
     """
-    n = scfg.n_clients
+    from repro.core.policies import POLICIES
+
+    unknown = [p for p in policies if p not in POLICIES]
+    if unknown:
+        raise ValueError(f"unknown policies {unknown} "
+                         f"(registered: {sorted(POLICIES)})")
+    needs_m = any(POLICIES[p][2] for p in policies)
     if uniform_m is None:
-        if "uniform" in policies:
+        if needs_m:
+            # M is matched under the channel actually being swept — a
+            # Rayleigh-only Monte Carlo would mis-match every baseline on
+            # rician/lognormal/gauss_markov sweeps
+            chan = (None if channel == "rayleigh" else
+                    make_channel(channel, sigmas, ch, **dict(channel_params)))
             uniform_m = float(estimate_avg_selected(
-                jax.random.fold_in(key, 7), sigmas, scfg, ch, match_rounds))
+                jax.random.fold_in(key, 7), sigmas, scfg, ch, match_rounds,
+                channel=chan))
         else:
             uniform_m = 1.0
-    runner = make_sweep_runner(sigmas, scfg, ch, rounds=rounds,
-                               policies=policies, solver=solver,
-                               guarantee_one=guarantee_one)
 
-    flags = jnp.array([[POLICY_IDS[p]] * len(seeds) for p in policies],
-                      jnp.int32).reshape(-1)
-    # fold_in per seed, tiled over policies: same seed -> same channel and
-    # selection randomness across policies, the paired comparison the paper
-    # plots.
+    # fold_in per seed, shared across policies: same seed -> same channel and
+    # selection randomness, the paired comparison the paper plots.
     seed_keys = jnp.stack([jax.random.fold_in(key, s) for s in seeds])
-    seed_keys = jnp.tile(seed_keys, (len(policies), 1))
 
-    comm, power, avg_power, nsel = runner(seed_keys, flags,
-                                          jnp.float32(uniform_m))
-    shape = (len(policies), len(seeds), rounds)
+    per_policy = []
+    for p in policies:
+        runner = make_sweep_runner(
+            sigmas, scfg, ch, rounds=rounds, policy=p, m_avg=uniform_m,
+            channel=channel, channel_params=channel_params, solver=solver,
+            guarantee_one=guarantee_one,
+            policy_params=(policy_params or {}).get(p))
+        per_policy.append(runner(seed_keys))
+
+    comm, power, avg_power, nsel = [
+        np.stack([np.asarray(r[i]) for r in per_policy]) for i in range(4)]
     return {
         "policies": list(policies),
         "seeds": np.asarray(seeds),
         "uniform_m": np.float32(uniform_m),
-        "comm_time": np.asarray(comm).reshape(shape),
-        "power": np.asarray(power).reshape(shape),
-        "avg_power": np.asarray(avg_power).reshape(shape),
-        "n_selected": np.asarray(nsel).reshape(shape),
+        "comm_time": comm,
+        "power": power,
+        "avg_power": avg_power,
+        "n_selected": nsel,
     }

@@ -21,7 +21,6 @@ mean over the pod dim lowers to the cross-pod all-reduce — the expensive,
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

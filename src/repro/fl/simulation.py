@@ -90,6 +90,11 @@ def run_simulation(key, params, ds: FederatedDataset, sim: SimConfig,
         return run_simulation_scan(key, params, ds, sim, scfg, ch, sigmas)
     if sim.engine != "loop":
         raise ValueError(f"unknown engine {sim.engine!r} (want 'scan'|'loop')")
+    if sim.channel != "rayleigh" or sim.policy not in ("proposed", "uniform"):
+        raise ValueError(
+            "the legacy loop engine only knows the paper's setup "
+            "(channel='rayleigh', policy in {'proposed', 'uniform'}); use "
+            "engine='scan' for registry channels/policies")
     return run_simulation_loop(key, params, ds, sim, scfg, ch, sigmas)
 
 
@@ -162,10 +167,21 @@ def run_simulation_loop(key, params, ds: FederatedDataset, sim: SimConfig,
 
 
 def match_uniform_m(key, sigmas, scfg: SchedulerConfig, ch: ChannelConfig,
-                    rounds: int = 300) -> float:
+                    rounds: int = 300, channel: str = "rayleigh",
+                    channel_params: tuple = ()) -> float:
     """Estimate Algorithm 2's average participation M to configure the
-    M-matched uniform baseline (paper Section VI's strong benchmark)."""
-    return float(estimate_avg_selected(key, sigmas, scfg, ch, rounds))
+    M-matched uniform baseline (paper Section VI's strong benchmark).
+
+    ``channel`` picks the fading model the estimate runs under — match M
+    against the channel you will actually sweep, or the "M-matched"
+    baseline is matched to the wrong gain distribution.
+    """
+    from repro.core import make_channel
+
+    chan = (None if channel == "rayleigh" else
+            make_channel(channel, sigmas, ch, **dict(channel_params)))
+    return float(estimate_avg_selected(key, sigmas, scfg, ch, rounds,
+                                       channel=chan))
 
 
 def time_to_accuracy(hist: Dict[str, np.ndarray], target: float

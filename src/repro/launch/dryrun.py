@@ -141,8 +141,6 @@ def build_train(cfg: ModelConfig, case, mesh, mode: ShardingMode,
                               is_leaf=lambda x: x is None or isinstance(x, P))
         qspec = P()
 
-        from repro.fl.round import fl_round
-
         def step(params, batch, selected, q):
             # constrain per-client replicas onto the pod axis
             cspecs = jax.tree.map(lambda s: P("pod", *tuple(s)), pspecs)

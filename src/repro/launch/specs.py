@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -124,7 +124,6 @@ def batch_pspecs(batch: Batch, mesh, *, client_dim: bool = False) -> Batch:
     def spec(x, is_tokens):
         if x is None:
             return None
-        nd = x.ndim
         wishes = []
         off = len(lead)
         if client_dim:

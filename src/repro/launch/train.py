@@ -90,7 +90,9 @@ def run_lm(args) -> dict:
                                         d_model=args.d_model)
     params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
     n_params = sum(x.size for x in jax.tree.leaves(params))
-    loss_fn = lambda p, b: M.loss_fn(p, b, cfg)
+    def loss_fn(p, b):
+        return M.loss_fn(p, b, cfg)
+
     step = jax.jit(make_train_step(loss_fn, args.gamma))
     key = jax.random.PRNGKey(args.seed + 1)
     losses = []

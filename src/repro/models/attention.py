@@ -175,10 +175,13 @@ def decode_attention(p, x, cfg: ModelConfig, cache: KVCache, *, window=None):
     k = apply_rope(k, pos[None, None], inv, rot)
 
     slot = pos % cache_len
+    # literal 0 indices default to int64 under JAX_ENABLE_X64 while slot is
+    # int32; dynamic_update_slice requires one integer type across indices
+    zero = jnp.zeros((), slot.dtype)
     kc = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
-                                      (0, slot, 0, 0))
+                                      (zero, slot, zero, zero))
     vc = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
-                                      (0, slot, 0, 0))
+                                      (zero, slot, zero, zero))
     sp = cache.slot_pos.at[slot].set(pos)
 
     valid = sp >= 0

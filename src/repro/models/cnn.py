@@ -38,14 +38,14 @@ def init_cnn(key, cfg: CNNConfig):
     return {
         "c1w": conv_init(k1, (cfg.ksize, cfg.ksize, cfg.channels, cfg.conv1),
                          cfg.ksize * cfg.ksize * cfg.channels),
-        "c1b": jnp.zeros((cfg.conv1,)),
+        "c1b": jnp.zeros((cfg.conv1,), jnp.float32),
         "c2w": conv_init(k2, (cfg.ksize, cfg.ksize, cfg.conv1, cfg.conv2),
                          cfg.ksize * cfg.ksize * cfg.conv1),
-        "c2b": jnp.zeros((cfg.conv2,)),
+        "c2b": jnp.zeros((cfg.conv2,), jnp.float32),
         "f1w": conv_init(k3, (flat, cfg.hidden), flat),
-        "f1b": jnp.zeros((cfg.hidden,)),
+        "f1b": jnp.zeros((cfg.hidden,), jnp.float32),
         "f2w": conv_init(k4, (cfg.hidden, cfg.n_classes), cfg.hidden),
-        "f2b": jnp.zeros((cfg.n_classes,)),
+        "f2b": jnp.zeros((cfg.n_classes,), jnp.float32),
     }
 
 

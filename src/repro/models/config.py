@@ -12,7 +12,6 @@ trillion-parameter configs in the dry-run.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import List, Optional, Tuple
 
 
@@ -235,5 +234,6 @@ class ModelConfig:
             n_media_tokens=min(self.n_media_tokens, 16) if self.n_media_tokens else 0,
             n_encoder_layers=min(self.n_encoder_layers, 2),
             encoder_seq=min(self.encoder_seq, 32) if self.encoder_seq else 0,
-            sliding_window=min(self.sliding_window, 64) if self.sliding_window else None,
+            sliding_window=(min(self.sliding_window, 64)
+                            if self.sliding_window else None),
         )

@@ -16,7 +16,6 @@ Three entry points per model:
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -7,7 +7,7 @@ momentum serve the non-FL baselines and examples.
 
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -26,8 +26,6 @@ from typing import Optional
 import jax
 from jax.sharding import PartitionSpec as P
 
-from repro.models.config import ModelConfig
-
 
 @dataclasses.dataclass(frozen=True)
 class ShardingMode:

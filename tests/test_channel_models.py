@@ -1,0 +1,125 @@
+"""Channel-model registry: stationary distributions, temporal correlation,
+and the (key, state) -> (gains, state) contract (repro/core/channel.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CHANNEL_IDS, CHANNEL_MODELS, ChannelConfig,
+                        channel_state_zero, draw_gains, homogeneous_sigmas,
+                        make_channel, resolve_sigmas)
+
+N = 64
+CH = ChannelConfig(n_clients=N)
+SIG = homogeneous_sigmas(N)  # sigma=1 -> gains ~ Exp(mean 2), clip inactive
+
+
+def _rollout(model, key, rounds):
+    """Scan a channel model, returning (rounds, N) gains."""
+
+    def body(state, k):
+        gains, state = model.step(k, state)
+        return state, gains
+
+    state = model.init(jax.random.fold_in(key, 0))
+    _, gains = jax.lax.scan(body, state, jax.random.split(key, rounds))
+    return np.asarray(gains)
+
+
+def test_registry_names_and_ids():
+    assert set(CHANNEL_MODELS) == {"rayleigh", "rician", "lognormal",
+                                   "gauss_markov"}
+    assert CHANNEL_IDS["rayleigh"] == 0
+    with pytest.raises(ValueError):
+        make_channel("awgn", SIG, CH)
+
+
+def test_state_contract():
+    """Every model: init -> (2, N) f32 state, step preserves the shape."""
+    for name in CHANNEL_MODELS:
+        model = make_channel(name, SIG, CH)
+        st = model.init(jax.random.PRNGKey(0))
+        assert st.shape == (2, N) and st.dtype == jnp.float32, name
+        gains, st2 = model.step(jax.random.PRNGKey(1), st)
+        assert gains.shape == (N,) and st2.shape == (2, N), name
+        lo, hi = CH.gain_bounds()
+        assert float(gains.min()) >= lo and float(gains.max()) <= hi, name
+
+
+def test_rayleigh_step_is_draw_gains_bitwise():
+    """The registry's rayleigh is the paper's draw_gains, bit for bit (the
+    pre-registry engines depend on this)."""
+    model = make_channel("rayleigh", SIG, CH)
+    key = jax.random.PRNGKey(3)
+    gains, st = model.step(key, channel_state_zero(N))
+    np.testing.assert_array_equal(np.asarray(gains),
+                                  np.asarray(draw_gains(key, SIG, CH)))
+    np.testing.assert_array_equal(np.asarray(st), 0.0)
+
+
+def test_rician_k_to_zero_recovers_rayleigh():
+    """K -> 0: same stationary gain distribution as Rayleigh (mean 2 sigma^2,
+    exponential shape). Compared via moments over many rounds."""
+    key = jax.random.PRNGKey(4)
+    ric = _rollout(make_channel("rician", SIG, CH, k_factor=1e-6), key, 400)
+    ray = _rollout(make_channel("rayleigh", SIG, CH), key, 400)
+    # Exponential(2): mean 2, std 2. 400*64 samples -> ~1% standard error.
+    assert abs(ric.mean() - ray.mean()) < 0.1
+    assert abs(ric.std() - ray.std()) < 0.15
+    assert abs(ric.mean() - 2.0) < 0.1
+
+
+def test_rician_large_k_concentrates():
+    """Strong LOS: mean power stays 2 sigma^2 but the spread collapses
+    (relative variance (1 + 2K)/(1 + K)^2 -> 0)."""
+    key = jax.random.PRNGKey(5)
+    ric = _rollout(make_channel("rician", SIG, CH, k_factor=50.0), key, 200)
+    ray = _rollout(make_channel("rayleigh", SIG, CH), key, 200)
+    assert abs(ric.mean() - 2.0) < 0.1
+    assert ric.std() < 0.3 * ray.std()
+
+
+def test_lognormal_preserves_mean_widens_spread():
+    key = jax.random.PRNGKey(6)
+    logn = _rollout(make_channel("lognormal", SIG, CH, shadow_db=6.0), key,
+                    400)
+    ray = _rollout(make_channel("rayleigh", SIG, CH), key, 400)
+    assert abs(logn.mean() - ray.mean()) < 0.2     # mean-normalized shadowing
+    assert logn.std() > 1.2 * ray.std()            # heavier tails
+
+
+@pytest.mark.parametrize("rho", [0.0, 0.9])
+def test_gauss_markov_autocorrelation(rho):
+    """Power autocorrelation of the complex AR(1) field: corr(|g_t|^2,
+    |g_{t+1}|^2) = rho^2 (≈ 0 when rho = 0, i.e. i.i.d. Rayleigh)."""
+    key = jax.random.PRNGKey(7)
+    g = _rollout(make_channel("gauss_markov", SIG, CH, rho=rho), key, 3000)
+    x, y = g[:-1].ravel(), g[1:].ravel()
+    corr = np.corrcoef(x, y)[0, 1]
+    assert abs(corr - rho ** 2) < 0.05, (corr, rho)
+    # stationary gain distribution is still Exponential(2 sigma^2)
+    assert abs(g.mean() - 2.0) < 0.1
+
+
+def test_gauss_markov_stationary_init():
+    """The t=0 state is drawn from the stationary law — no power ramp-up
+    over the first rounds."""
+    key = jax.random.PRNGKey(8)
+    g = _rollout(make_channel("gauss_markov", SIG, CH, rho=0.95), key, 40)
+    # a zero-init field would start at (1 - rho^2) * 2 sigma^2 ≈ 0.2 and ramp
+    # up; the stationary init starts at full power (2 sigma^2 ± sample noise)
+    assert 1.0 < g[0].mean() < 3.5
+    assert 1.2 < g[:5].mean() < 3.0
+
+
+def test_resolve_sigmas():
+    assert resolve_sigmas("homogeneous", 10).shape == (10,)
+    het = resolve_sigmas("heterogeneous", 40)
+    assert het.shape == (40,) and float(het.min()) < float(het.max())
+    explicit = resolve_sigmas(np.full(8, 0.5, np.float32), 8)
+    np.testing.assert_allclose(np.asarray(explicit), 0.5)
+    with pytest.raises(ValueError):
+        resolve_sigmas("bimodal", 10)
+    with pytest.raises(ValueError):
+        resolve_sigmas(np.ones(4), 8)

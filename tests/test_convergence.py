@@ -12,7 +12,6 @@ The deepest paper claim we can verify numerically:
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (BoundConstants, accumulate, corollary1_bound,
                         init_accumulator)
@@ -23,14 +22,17 @@ N_CLIENTS, DIM, HID = 8, 6, 8
 
 
 def _make_problem(key):
+    # dtype pinned so the drawn problem (and the Monte-Carlo tolerances
+    # calibrated for it) is identical under JAX_ENABLE_X64=1
+    f32 = jnp.float32
     ks = jax.random.split(key, 4)
-    w_true = jax.random.normal(ks[0], (DIM, 1))
-    xs = jax.random.normal(ks[1], (N_CLIENTS, 16, DIM))
+    w_true = jax.random.normal(ks[0], (DIM, 1), dtype=f32)
+    xs = jax.random.normal(ks[1], (N_CLIENTS, 16, DIM), dtype=f32)
     # heterogeneous (non-iid) targets: per-client bias
-    bias = 0.5 * jax.random.normal(ks[2], (N_CLIENTS, 1, 1))
+    bias = 0.5 * jax.random.normal(ks[2], (N_CLIENTS, 1, 1), dtype=f32)
     ys = jnp.tanh(xs @ w_true) + bias
-    params = {"w1": jax.random.normal(ks[3], (DIM, HID)) * 0.4,
-              "w2": jnp.zeros((HID, 1))}
+    params = {"w1": jax.random.normal(ks[3], (DIM, HID), dtype=f32) * 0.4,
+              "w2": jnp.zeros((HID, 1), f32)}
     return params, xs, ys
 
 
@@ -67,7 +69,7 @@ def test_aggregation_unbiased_monte_carlo():
     params, xs, ys = _make_problem(jax.random.PRNGKey(1))
     steps = 2
     batches = _client_batches(xs, ys, steps)
-    q = jnp.linspace(0.15, 0.95, N_CLIENTS)
+    q = jnp.linspace(0.15, 0.95, N_CLIENTS, dtype=jnp.float32)
     full = fl_round(_loss, params, batches, jnp.ones((N_CLIENTS,)),
                     jnp.ones((N_CLIENTS,)), 0.05, steps)
 
@@ -76,7 +78,8 @@ def test_aggregation_unbiased_monte_carlo():
 
     @jax.jit
     def one(k):
-        sel = (jax.random.uniform(k, (N_CLIENTS,)) < q).astype(jnp.float32)
+        u = jax.random.uniform(k, (N_CLIENTS,), dtype=jnp.float32)
+        sel = (u < q).astype(jnp.float32)
         return fl_round(_loss, params, batches, sel, q, 0.05, steps)
 
     acc = None
@@ -172,7 +175,6 @@ def test_delta_aggregate_unbiased_and_lower_variance():
 def test_weighted_aggregate_weights():
     """Aggregation weight of each client is exactly I_n/(N q_n)."""
     tree = {"a": jnp.eye(4)[:, :1]}  # distinct one-hot per client
-    client_params = {"a": jnp.eye(4)}
     sel = jnp.array([1.0, 0.0, 1.0, 1.0])
     q = jnp.array([0.5, 0.5, 0.25, 1.0])
     out = weighted_aggregate(tree, {"a": jnp.eye(4)}, sel, q)

@@ -146,3 +146,24 @@ def test_run_sweep_proposed_only_skips_matching(small_setup):
     with pytest.raises(ValueError):
         run_sweep(jax.random.PRNGKey(7), sig, scfg, ch, rounds=5,
                   policies=("greedy",))
+
+
+def test_run_sweep_registry_policies_and_channels(small_setup):
+    """All six registered policies sweep in one call, per-policy runners
+    pruned; a temporally-correlated channel swaps in via the registry."""
+    _, _, ch, scfg = small_setup
+    sig = heterogeneous_sigmas(N)
+    policies = ("proposed", "uniform", "greedy_channel",
+                "proportional_gain", "update_aware", "aoi_capped")
+    sw = run_sweep(jax.random.PRNGKey(8), sig, scfg, ch, rounds=30,
+                   policies=policies, seeds=(0, 1),
+                   channel="gauss_markov", channel_params=(("rho", 0.8),))
+    assert sw["comm_time"].shape == (6, 2, 30)
+    assert np.all(np.diff(sw["comm_time"], axis=-1) >= 0)
+    assert np.all(sw["n_selected"] >= 1)
+    # degenerate-q policies (greedy, aoi) report q = indicator, so their
+    # per-round participation is ~m by construction
+    m = float(sw["uniform_m"])
+    assert abs(sw["n_selected"][2].mean() - round(m)) < 1.0
+    # aoi's forced picks can exceed m when many clients hit the cap
+    assert sw["n_selected"][5].mean() >= round(m) - 1.0

@@ -1,14 +1,10 @@
 """MoE dispatch invariants + property tests."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
-from repro.configs import get_config
 from repro.models import moe as moe_mod
 from repro.models.config import ModelConfig
 

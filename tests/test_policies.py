@@ -1,12 +1,18 @@
-"""Baseline-policy invariants."""
+"""Baseline-policy invariants + the unified policy registry
+(repro/core/policies.py)."""
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
-from repro.core import ChannelConfig, draw_gains, homogeneous_sigmas
+from repro.core import (POLICIES, POLICY_IDS, ChannelConfig, SchedulerConfig,
+                        draw_gains, homogeneous_sigmas, init_policy_state,
+                        make_policy)
 from repro.core.policies import greedy_channel, proportional_gain
 
 CH = ChannelConfig(n_clients=50)
+SCFG = SchedulerConfig(n_clients=50, model_bits=32 * 50000.0)
 
 
 def test_greedy_selects_best_channels():
@@ -27,3 +33,109 @@ def test_proportional_gain_targets_average():
     # monotone in gain
     order = jnp.argsort(gains)
     assert bool(jnp.all(jnp.diff(q[order]) >= -1e-7))
+
+
+# --------------------------------------------------------------------------
+# Registry.
+# --------------------------------------------------------------------------
+
+ALL = ("proposed", "uniform", "greedy_channel", "proportional_gain",
+       "update_aware", "aoi_capped")
+
+
+def test_registry_names_and_stable_ids():
+    assert tuple(POLICIES) == ALL
+    assert POLICY_IDS["proposed"] == 0 and POLICY_IDS["uniform"] == 1
+    with pytest.raises(ValueError):
+        make_policy("fedavg", SCFG, CH)
+    with pytest.raises(ValueError):
+        make_policy("uniform", SCFG, CH)          # baseline without m_avg
+    with pytest.raises(ValueError):
+        init_policy_state("fedavg", 50)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_step_interface_contract(name):
+    """Every policy: (key, gains, state) -> (sel, q, p, state) with the
+    shared shapes/dtypes, t advancing, and the power budget respected."""
+    step = make_policy(name, SCFG, CH, m_avg=5.0)
+    st = init_policy_state(name, 50)
+    gains = draw_gains(jax.random.PRNGKey(2), homogeneous_sigmas(50), CH)
+    sel, q, p, st2 = step(jax.random.PRNGKey(3), gains, st)
+    assert sel.shape == q.shape == p.shape == (50,), name
+    assert sel.dtype == jnp.bool_ and q.dtype == jnp.float32, name
+    assert st2.z.shape == (50,) and st2.aux.shape == (50,), name
+    assert int(st2.t) == int(st.t) + 1, name
+    assert bool(sel.any()), name
+    assert bool(jnp.all(q >= 0) & jnp.all(q <= 1.0)), name
+    if name != "proposed":
+        # baselines satisfy the power budget instantaneously (P = Pbar N/M');
+        # Algorithm 2 enforces it only as a time-average via the queues
+        assert float((p * sel.astype(jnp.float32)).sum()) \
+            <= CH.p_bar * 50 * 1.01, name
+
+
+def _run(step, st, key, rounds):
+    def body(c, k):
+        st = c
+        gains = draw_gains(jax.random.fold_in(k, 0),
+                           homogeneous_sigmas(50), CH)
+        sel, q, p, st = step(jax.random.fold_in(k, 1), gains, st)
+        return st, (sel, q)
+
+    return jax.lax.scan(body, st, jax.random.split(key, rounds))
+
+
+def test_update_aware_favors_stale_clients():
+    """The accumulated-update-norm proxy grows while a client is skipped, so
+    its selection probability rises until it transmits (Amiri et al.-style
+    update-aware scheduling)."""
+    step = make_policy("update_aware", SCFG, CH, m_avg=5.0)
+    st, (sel, q) = _run(step, init_policy_state("update_aware", 50),
+                        jax.random.PRNGKey(4), 200)
+    sel = np.asarray(sel)
+    q = np.asarray(q)
+    # staleness at round t: rounds since last selection
+    stale = np.zeros(50)
+    qs_stale, qs_fresh = [], []
+    for t in range(200):
+        hi = stale > 5
+        if hi.any() and (~hi).any():
+            qs_stale.append(q[t][hi].mean())
+            qs_fresh.append(q[t][~hi].mean())
+        stale = np.where(sel[t], 0, stale + 1)
+    assert np.mean(qs_stale) > 1.5 * np.mean(qs_fresh)
+    # everyone gets scheduled eventually (q floored away from 0)
+    assert sel.any(axis=0).all()
+
+
+def test_aoi_capped_enforces_age_cap():
+    """No client's age-of-information ever exceeds the cap: clients at the
+    cap are forced in regardless of their channel."""
+    cap = 8
+    step = make_policy("aoi_capped", SCFG, CH, m_avg=5.0, max_age=cap)
+    st, (sel, q) = _run(step, init_policy_state("aoi_capped", 50),
+                        jax.random.PRNGKey(5), 120)
+    sel = np.asarray(sel)
+    age = np.zeros(50)
+    for t in range(120):
+        assert (age <= cap).all(), (t, age.max())
+        age = np.where(sel[t], 0, age + 1)
+    # and between forced picks it behaves greedily: ~m selected per round
+    assert 3.0 <= sel.sum(axis=1).mean() <= 9.0
+
+
+def test_proposed_policy_matches_schedule_step():
+    """The registry's Algorithm 2 is schedule_step, bit for bit."""
+    from repro.core import schedule_step, init_state
+
+    step = make_policy("proposed", SCFG, CH)
+    gains = draw_gains(jax.random.PRNGKey(6), homogeneous_sigmas(50), CH)
+    k = jax.random.PRNGKey(7)
+    sel_a, q_a, p_a, st_a = step(k, gains, init_policy_state("proposed", 50))
+    sel_b, q_b, p_b, st_b = schedule_step(k, gains, init_state(SCFG), SCFG,
+                                          CH)
+    np.testing.assert_array_equal(np.asarray(sel_a), np.asarray(sel_b))
+    np.testing.assert_array_equal(np.asarray(q_a), np.asarray(q_b))
+    np.testing.assert_array_equal(np.asarray(p_a), np.asarray(p_b))
+    np.testing.assert_array_equal(np.asarray(st_a.z), np.asarray(st_b.z))

@@ -3,13 +3,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
 from repro.core import (ChannelConfig, SchedulerConfig, draw_gains,
                         heterogeneous_sigmas, homogeneous_sigmas, init_state,
-                        sample_selection, schedule_step, solve_round,
-                        update_queues, y0)
+                        sample_selection, solve_round, update_queues)
 from repro.core.scheduler import _objective
 
 CH = ChannelConfig(n_clients=100)

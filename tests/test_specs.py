@@ -1,6 +1,5 @@
 """Dry-run spec machinery: shape cases, adaptive sharding assignment."""
 
-import jax
 import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
