@@ -17,7 +17,7 @@ from repro.core import (draw_gains, heterogeneous_sigmas,
 from repro.data.synthetic import make_cifar10_like, make_femnist_like
 from repro.fl.simulation import (SimConfig, match_uniform_m,
                                  run_simulation)
-from repro.models.cnn import init_cnn
+from repro.models.registry import make_model
 
 
 @dataclasses.dataclass
@@ -65,7 +65,11 @@ def run_policy(dataset: str, channel: str, lam: float, policy: str,
     scfg = dataclasses.replace(exp.scheduler(lam), V=v)
     sig = homogeneous_sigmas(exp.n_clients) if channel == "homogeneous" \
         else heterogeneous_sigmas(exp.n_clients)
-    params = init_cnn(jax.random.PRNGKey(seed + 1), exp.cnn)
+    # registry dispatch; the spec rebuilds exp.cnn's architecture from the
+    # dataset shapes (paper defaults conv1=32/conv2=64/hidden=120)
+    params = make_model(
+        "cnn", ds, conv1=exp.cnn.conv1, conv2=exp.cnn.conv2,
+        hidden=exp.cnn.hidden).init_fn(jax.random.PRNGKey(seed + 1))
     uniform_m = 0.0
     if policy == "uniform":
         uniform_m = match_uniform_m(jax.random.PRNGKey(7), sig, scfg, ch)

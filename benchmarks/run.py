@@ -183,7 +183,7 @@ def bench_engine(prof):
                                  make_chunk_runner, make_sim_round,
                                  make_solve_fn, make_sweep_runner)
     from repro.fl.simulation import time_to_accuracy
-    from repro.models.cnn import CNNConfig, apply_cnn, init_cnn
+    from repro.models.registry import make_model
 
     results = {}
     # steady-state timing window scales with the profile (smoke stays small)
@@ -193,21 +193,22 @@ def bench_engine(prof):
     for n in (128, 3597):
         ds = make_cifar10_like(jax.random.PRNGKey(0), n_clients=n,
                                per_client=16, n_test=256, h=8, w=8)
-        cnn = CNNConfig(8, 8, 3, 10, conv1=4, conv2=8, hidden=16)
-        params = init_cnn(jax.random.PRNGKey(1), cnn)
+        model_params = (("conv1", 4), ("conv2", 8), ("hidden", 16))
+        spec = make_model("cnn", ds, **dict(model_params))
+        params = spec.init_fn(jax.random.PRNGKey(1))
         ch = ChannelConfig(n_clients=n)
         scfg = SchedulerConfig(n_clients=n, model_bits=32 * 5000.0)
         sig = heterogeneous_sigmas(n)
         sim = SimConfig(rounds=rounds, eval_every=10, m_cap=2, batch=4,
-                        local_steps=1, eval_size=256)
+                        local_steps=1, eval_size=256, model="cnn",
+                        model_params=model_params)
 
         # legacy driving pattern: host split + per-round jit call + float()
         # syncs + separate eval call (exactly run_simulation_loop's loop)
         sim_round = jax.jit(make_sim_round(ds, sim, scfg, ch, sig),
                             donate_argnums=(0,))
-        eval_acc = jax.jit(lambda p: jnp.mean(
-            jnp.argmax(apply_cnn(p, ds.test_images[:256]), -1)
-            == ds.test_labels[:256]))
+        eval_acc = jax.jit(lambda p: spec.eval_fn(
+            p, ds.test_images[:256], ds.test_labels[:256]))
 
         def drive_loop():
             p, pst, cst = init_carry(jax.random.PRNGKey(2), params,
@@ -358,18 +359,20 @@ def bench_grid(prof):
     from repro.fl.engine import SimConfig, make_config_runner
     from repro.fl.grid import (GridSpec, grid_cell_inputs, make_grid_runner,
                                sim_for_config)
-    from repro.models.cnn import CNNConfig, init_cnn
+    from repro.models.registry import make_model
 
     n = 64
     ds = make_cifar10_like(jax.random.PRNGKey(0), n_clients=n,
                            per_client=16, n_test=128, h=8, w=8)
-    cnn = CNNConfig(8, 8, 3, 10, conv1=4, conv2=8, hidden=16)
-    params = init_cnn(jax.random.PRNGKey(1), cnn)
+    model_params = (("conv1", 4), ("conv2", 8), ("hidden", 16))
+    params = make_model("cnn", ds,
+                        **dict(model_params)).init_fn(jax.random.PRNGKey(1))
     ch = ChannelConfig(n_clients=n)
     scfg = SchedulerConfig(n_clients=n, model_bits=32 * 5000.0)
     rounds = max(5, min(20, prof.rounds // 4))
     sim = SimConfig(rounds=rounds, eval_every=5, m_cap=2, batch=4,
-                    local_steps=1, eval_size=128, uniform_m=4.0)
+                    local_steps=1, eval_size=128, uniform_m=4.0,
+                    model="cnn", model_params=model_params)
     spec = GridSpec(
         channels=("rayleigh", ("gauss_markov", (("rho", 0.9),))),
         sigma_dists=("heterogeneous",),
@@ -426,6 +429,83 @@ def bench_grid(prof):
     return {"speedup": speedup, "devices": n_dev}
 
 
+# -------------------------------------------------------------------- round
+
+def bench_round(prof):
+    """Participant-sharded vs sequential round throughput at
+    m_cap in {8, 32, 128} (run under the scripts/test.sh 8-virtual-device
+    idiom to see multi-device numbers on CPU).
+
+    Both paths drive the SAME compiled chunk runner machinery (steady
+    state, warmed) on the same registry model; the only difference is
+    ``SimConfig.participant_shards`` — 0 is the sequential ``lax.map`` over
+    all participants, D shards it across the device mesh with the
+    q-weighted aggregate as a psum. On hosts where virtual devices share a
+    couple of physical cores the speedup saturates at the core count, not
+    the device count (same caveat as bench_grid); the m_cap=128 row is
+    where sharding matters — sequential participant training is why the
+    engines historically capped m_cap ~32.
+    """
+    import dataclasses
+
+    import jax
+    from repro.core import (ChannelConfig, SchedulerConfig,
+                            heterogeneous_sigmas)
+    from repro.data.synthetic import make_cifar10_like
+    from repro.fl.engine import SimConfig, init_carry, make_chunk_runner
+    from repro.models.registry import make_model
+
+    n = 256
+    ds = make_cifar10_like(jax.random.PRNGKey(0), n_clients=n,
+                           per_client=16, n_test=128, h=8, w=8)
+    model_params = (("conv1", 4), ("conv2", 8), ("hidden", 16))
+    params = make_model("cnn", ds,
+                        **dict(model_params)).init_fn(jax.random.PRNGKey(1))
+    ch = ChannelConfig(n_clients=n)
+    scfg = SchedulerConfig(n_clients=n, model_bits=32 * 5000.0)
+    sig = heterogeneous_sigmas(n)
+    n_dev = len(jax.devices())
+    rounds = max(4, min(16, prof.rounds // 2))
+    results = {"devices": n_dev, "rounds": rounds, "m_cap": {}}
+
+    for m_cap in (8, 32, 128):
+        base = SimConfig(rounds=rounds, eval_every=rounds, m_cap=m_cap,
+                         batch=4, local_steps=1, eval_size=128, model="cnn",
+                         model_params=model_params)
+        walls = {}
+        for label, sim in (("sequential", base),
+                           ("sharded", dataclasses.replace(
+                               base, participant_shards=n_dev))):
+            run_chunk = make_chunk_runner(ds, sim, scfg, ch, sig)
+
+            def drive():
+                carry = init_carry(jax.random.PRNGKey(2), params, scfg,
+                                   sim=sim, sigmas=sig, ch=ch)
+                out = run_chunk(carry, n_rounds=rounds)
+                jax.block_until_ready(out)
+
+            drive()            # warm the compiled path
+            t0 = time.time()
+            drive()
+            walls[label] = time.time() - t0
+        rps = {k: rounds / w for k, w in walls.items()}
+        speedup = rps["sharded"] / rps["sequential"]
+        results["m_cap"][m_cap] = {
+            "rounds_per_sec_sequential": rps["sequential"],
+            "rounds_per_sec_sharded": rps["sharded"],
+            "participants_per_sec_sharded": rps["sharded"] * m_cap,
+            "speedup": speedup,
+        }
+        _emit(f"round_m{m_cap}_sequential", 1e6 / rps["sequential"],
+              f"rounds_per_sec={rps['sequential']:.1f}")
+        _emit(f"round_m{m_cap}_sharded", 1e6 / rps["sharded"],
+              f"rounds_per_sec={rps['sharded']:.1f};devices={n_dev};"
+              f"speedup_vs_sequential={speedup:.2f};"
+              f"participants_per_sec={rps['sharded'] * m_cap:.0f}")
+    _dump("round", results)
+    return results
+
+
 # ------------------------------------------------------------------ kernels
 
 def bench_kernels(prof):
@@ -454,6 +534,7 @@ def bench_kernels(prof):
 BENCHES = {
     "engine": bench_engine,
     "grid": bench_grid,
+    "round": bench_round,
     "fig2_cifar": bench_fig2_cifar,
     "fig3_lambda": bench_fig3_lambda,
     "fig4_femnist": bench_fig4_femnist,

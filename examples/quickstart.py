@@ -13,15 +13,19 @@ import jax.numpy as jnp
 from repro.core import (ChannelConfig, SchedulerConfig, heterogeneous_sigmas)
 from repro.data.synthetic import make_cifar10_like
 from repro.fl.simulation import SimConfig, match_uniform_m, run_simulation
-from repro.models.cnn import CNNConfig, init_cnn
+from repro.models.registry import make_model
 
 
 def main():
     n = 40
     ds = make_cifar10_like(jax.random.PRNGKey(0), n_clients=n,
                            per_client=64, n_test=400, h=16, w=16)
-    cnn = CNNConfig(16, 16, 3, 10, conv1=8, conv2=16, hidden=32)
-    params = init_cnn(jax.random.PRNGKey(1), cnn)
+    # what federates is a registry choice: SimConfig(model=...) picks any of
+    # repro.models.registry.MODELS ("cnn" | "mlp" | "transformer_lm"); the
+    # spec's init_fn is bound to the dataset's shapes
+    model_params = dict(conv1=8, conv2=16, hidden=32)
+    params = make_model("cnn", ds, **model_params).init_fn(
+        jax.random.PRNGKey(1))
     ch = ChannelConfig(n_clients=n)
     scfg = SchedulerConfig(n_clients=n, model_bits=32 * 50_000.0, lam=10.0,
                            V=1000.0)
@@ -29,7 +33,8 @@ def main():
 
     rounds = 12
     base = dict(rounds=rounds, eval_every=rounds - 1, m_cap=6, batch=8,
-                local_steps=3, eval_size=400)
+                local_steps=3, eval_size=400, model="cnn",
+                model_params=tuple(model_params.items()))
 
     print("== Algorithm 2 (proposed) ==")
     hp = run_simulation(jax.random.PRNGKey(2), params, ds,

@@ -16,7 +16,7 @@ import jax
 from repro.core import ChannelConfig, SchedulerConfig, heterogeneous_sigmas
 from repro.data.synthetic import make_cifar10_like
 from repro.fl import GridSpec, SimConfig, match_uniform_m, run_grid
-from repro.models.cnn import CNNConfig, init_cnn
+from repro.models.registry import make_model
 
 N = 64          # clients (tiny so the demo stays ~a minute on CPU)
 ROUNDS = 40
@@ -27,8 +27,8 @@ def main():
     key = jax.random.PRNGKey(0)
     ds = make_cifar10_like(key, n_clients=N, per_client=64, n_test=512,
                            h=16, w=16)
-    params = init_cnn(jax.random.PRNGKey(1),
-                      CNNConfig(16, 16, 3, 10, conv1=8, conv2=16, hidden=64))
+    params = make_model("cnn", ds, conv1=8, conv2=16,
+                        hidden=64).init_fn(jax.random.PRNGKey(1))
     ch = ChannelConfig(n_clients=N)
     scfg = SchedulerConfig(n_clients=N, model_bits=32 * 50000.0, lam=10.0)
 

@@ -84,11 +84,16 @@ def _q_eq17(p, gains, z, cfg: SchedulerConfig, ch: ChannelConfig):
     return jnp.clip(q, cfg.q_floor, 1.0)
 
 
-def solve_round(gains: jax.Array, z: jax.Array, cfg: SchedulerConfig,
-                ch: ChannelConfig) -> Tuple[jax.Array, jax.Array]:
-    """Vectorized Theorem-2 solve: gains, z of shape (N,) -> (q, P) each (N,).
+def solve_candidates(gains: jax.Array, z: jax.Array, cfg: SchedulerConfig,
+                     ch: ChannelConfig):
+    """Both Theorem-2 candidates plus the branch-free keep decision.
 
-    Pure jnp (this is also the oracle for the Pallas `scheduler_solve` kernel).
+    Returns ``(q_int, p_int, q_bnd, p_bnd, use_int)``: the interior
+    (Eq. 16/17) and boundary (P = Pmax) candidates, and the boolean mask of
+    clients where the interior candidate's objective wins. Exposed so the
+    property tests can assert the kept candidate never loses to the
+    discarded one (tests/test_scheduler.py); :func:`solve_round` is the
+    thin selection on top.
     """
     gains = gains.astype(jnp.float32)
     z = z.astype(jnp.float32)
@@ -115,6 +120,16 @@ def solve_round(gains: jax.Array, z: jax.Array, cfg: SchedulerConfig,
     f_int = _objective(q_int, p_int, gains, z, cfg, ch)
     f_bnd = _objective(q_bnd, p_bnd, gains, z, cfg, ch)
     use_int = jnp.isfinite(f_int) & (f_int <= f_bnd)
+    return q_int, p_int, q_bnd, p_bnd, use_int
+
+
+def solve_round(gains: jax.Array, z: jax.Array, cfg: SchedulerConfig,
+                ch: ChannelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Vectorized Theorem-2 solve: gains, z of shape (N,) -> (q, P) each (N,).
+
+    Pure jnp (this is also the oracle for the Pallas `scheduler_solve` kernel).
+    """
+    q_int, p_int, q_bnd, p_bnd, use_int = solve_candidates(gains, z, cfg, ch)
     q = jnp.where(use_int, q_int, q_bnd)
     p = jnp.where(use_int, p_int, p_bnd)
     return q, p

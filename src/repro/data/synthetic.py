@@ -25,12 +25,20 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass
 class FederatedDataset:
-    """Client-partitioned dataset with a common test split."""
+    """Client-partitioned dataset with a common test split.
 
-    client_images: jax.Array     # (N, per_client, H, W, C)
-    client_labels: jax.Array     # (N, per_client) int32
-    test_images: jax.Array       # (T, H, W, C)
-    test_labels: jax.Array       # (T,) int32
+    Image problems: ``client_images`` (N, per_client, H, W, C) float,
+    ``client_labels`` (N, per_client) int32. Token problems
+    (``make_lm_federated``): ``client_images`` (N, per_client, S) int32
+    token sequences, ``client_labels`` the matching (N, per_client, S)
+    next-token targets — the engines only ever index the leading two axes,
+    so both layouts flow through the same round machinery.
+    """
+
+    client_images: jax.Array     # (N, per_client, H, W, C) | (N, per_client, S)
+    client_labels: jax.Array     # (N, per_client) | (N, per_client, S) int32
+    test_images: jax.Array       # (T, H, W, C) | (T, S)
+    test_labels: jax.Array       # (T,) | (T, S) int32
     n_classes: int
 
     @property
@@ -110,3 +118,35 @@ def make_token_stream(key, batch: int, seq: int, vocab: int):
     tokens = jax.random.randint(k1, (batch, seq), 0, vocab)
     labels = jnp.roll(tokens, -1, axis=1)
     return tokens, labels
+
+
+def make_lm_federated(key, n_clients: int = 40, per_client: int = 32,
+                      seq: int = 16, vocab: int = 32,
+                      n_test: int = 512) -> FederatedDataset:
+    """Federated token streams for ``model="transformer_lm"``.
+
+    Same container as the image datasets — ``client_images`` holds the
+    (N, per_client, seq) int32 token sequences and ``client_labels`` the
+    matching next-token targets (``make_token_stream``'s roll convention),
+    so the engines' gather/batch plumbing works unchanged. Non-iid like
+    ``make_femnist_like``: each client draws tokens from its own
+    Dirichlet(0.3) unigram mix, so the global model has learnable marginal
+    structure (accuracy rises above 1/vocab) while clients disagree — the
+    regime where Algorithm 1's unbiased 1/q weighting actually matters.
+    """
+    keys = jax.random.split(key, 3)
+    alpha = jnp.full((vocab,), 0.3)
+    mix = jax.random.dirichlet(keys[0], alpha, (n_clients,))
+    tokens = jax.vmap(
+        lambda k, p: jax.random.choice(k, vocab, (per_client, seq), p=p))(
+            jax.random.split(keys[1], n_clients), mix)
+    tokens = tokens.astype(jnp.int32)
+    targets = jnp.roll(tokens, -1, axis=-1)
+    # test split: the global mixture (uniform over clients' mixes)
+    test_mix = jnp.mean(mix, axis=0)
+    test_tokens = jax.random.choice(keys[2], vocab, (n_test, seq),
+                                    p=test_mix).astype(jnp.int32)
+    test_targets = jnp.roll(test_tokens, -1, axis=-1)
+    return FederatedDataset(client_images=tokens, client_labels=targets,
+                            test_images=test_tokens,
+                            test_labels=test_targets, n_classes=vocab)

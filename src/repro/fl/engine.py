@@ -24,6 +24,13 @@ registries (``repro.core.channel``, ``repro.core.policies``):
   ``"jnp"`` is the vectorized closed form from ``repro.core.scheduler``;
   ``"pallas"`` is the tiled VPU kernel from ``repro.kernels``, with
   ``interpret`` auto-selected off-TPU so the same config runs everywhere.
+* ``SimConfig.model`` picks WHAT federates through the model registry
+  (``repro.models.registry``: cnn | mlp | transformer_lm), and
+  ``SimConfig.participant_shards`` picks HOW: 0 trains the sampled
+  participants sequentially (``lax.map``); D >= 1 shards the participant
+  axis over a D-device mesh (``fl/round.py::make_sharded_round_update``)
+  with the Algorithm-1 aggregate as a cross-device psum — bitwise-equal to
+  the sequential path at D=1 (tests/test_round_sharded.py).
 
 The multi-scenario grid (channel x sigma-distribution x policy x seed in a
 single ``shard_map`` call across devices) lives in ``repro.fl.grid`` and is
@@ -50,8 +57,9 @@ from repro.core import (ChannelConfig, SchedulerConfig, channel_rate,
                         make_channel, make_policy)
 from repro.core.policies import POLICY_IDS  # noqa: F401  (re-exported)
 from repro.data.synthetic import FederatedDataset
-from repro.fl.round import local_sgd
-from repro.models.cnn import apply_cnn, cnn_loss
+from repro.fl.round import (local_sgd, make_sharded_round_update,
+                            masked_aggregate)
+from repro.models.registry import make_model
 
 # fold_in tag consumed by stateful channel inits (keeps the round-key chain
 # identical to the stateless models', so rayleigh trajectories are unchanged)
@@ -78,6 +86,11 @@ class SimConfig:
     channel: str = "rayleigh"    # any repro.core.channel.CHANNEL_MODELS name
     channel_params: tuple = ()   # ((name, value), ...) model extras
     policy_params: tuple = ()    # ((name, value), ...) policy extras
+    model: str = "cnn"           # any repro.models.registry.MODELS name
+    model_params: tuple = ()     # ((name, value), ...) model extras
+    participant_shards: int = 0  # 0: sequential lax.map; D>=1: shard_map
+                                 # the participant axis over D devices
+    wire_dtype: str = "float32"  # delta-aggregation wire ("float32"|"bfloat16")
 
 
 # --------------------------------------------------------------------------
@@ -114,23 +127,15 @@ def make_solve_fn(scfg: SchedulerConfig, ch: ChannelConfig,
 # One simulated round (scan body).
 # --------------------------------------------------------------------------
 
-def _aggregate(params, updated, sel_valid, q_sel, n_clients, aggregation):
-    """Algorithm 1 line 7 over the <= m_cap materialized participants."""
-    w = sel_valid.astype(jnp.float32) / jnp.maximum(q_sel, 1e-9) / n_clients
+WIRE_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
 
-    if aggregation == "delta":
-        def agg(x, y):
-            wf = w.reshape((-1,) + (1,) * (y.ndim - 1))
-            delta = y.astype(jnp.float32) - x.astype(jnp.float32)[None]
-            return x.astype(jnp.float32) + jnp.sum(delta * wf, axis=0)
 
-        return jax.tree.map(agg, params, updated)
-
-    def agg(y):
-        wf = w.reshape((-1,) + (1,) * (y.ndim - 1))
-        return jnp.sum(y.astype(jnp.float32) * wf, axis=0)
-
-    return jax.tree.map(agg, updated)
+def resolve_wire_dtype(name: str):
+    """``SimConfig.wire_dtype`` -> jnp dtype (delta-aggregation wire)."""
+    if name not in WIRE_DTYPES:
+        raise ValueError(f"unknown wire_dtype {name!r} "
+                         f"(want one of {sorted(WIRE_DTYPES)})")
+    return WIRE_DTYPES[name]
 
 
 def make_round_core(ds: FederatedDataset, sim: SimConfig,
@@ -145,9 +150,24 @@ def make_round_core(ds: FederatedDataset, sim: SimConfig,
     registries (bound per cell by the grid). Key-split order and all
     accounting mirror the legacy engine exactly, so grid, scan, and loop
     trajectories agree on common configurations.
+
+    What trains is ``sim.model`` resolved through the model registry
+    (``repro.models.registry``). ``sim.participant_shards >= 1`` routes the
+    local-SGD + aggregate through the participant-sharded ``shard_map``
+    update (``fl/round.py::make_sharded_round_update``); 0 keeps the
+    sequential ``lax.map`` path. The two are bitwise-equal at mesh size 1
+    (tests/test_round_sharded.py documents the per-mesh contract).
     """
     n = ds.n_clients
     m_cap = sim.m_cap
+    spec = make_model(sim.model, ds, **dict(sim.model_params))
+    wire = resolve_wire_dtype(sim.wire_dtype)
+    sharded_update = None
+    if sim.participant_shards:
+        sharded_update = make_sharded_round_update(
+            spec.loss_fn, sim.gamma, sim.local_steps, n,
+            sim.participant_shards, aggregation=sim.aggregation,
+            wire_dtype=wire)
 
     def round_core(channel_step, policy_step, rate_cfg, params, pol_state,
                    ch_state, key):
@@ -180,13 +200,17 @@ def make_round_core(ds: FederatedDataset, sim: SimConfig,
             k_bat, (m_cap, sim.local_steps, sim.batch), 0, per_client)
         imgs = ds.client_images[sel_idx[:, None, None], idx]
         labs = ds.client_labels[sel_idx[:, None, None], idx]
-        # lax.map, not vmap: vmapped convs over per-client weights lower to
-        # grouped convolutions (~30x slower on XLA:CPU).
-        updated = jax.lax.map(
-            lambda b: local_sgd(cnn_loss, params, b, sim.gamma,
-                                sim.local_steps), (imgs, labs))
-        new_params = _aggregate(params, updated, sel_valid, q_sel, n,
-                                sim.aggregation)
+        if sharded_update is not None:
+            new_params = sharded_update(params, imgs, labs, sel_valid,
+                                        q_sel)
+        else:
+            # lax.map, not vmap: vmapped convs over per-client weights
+            # lower to grouped convolutions (~30x slower on XLA:CPU).
+            updated = jax.lax.map(
+                lambda b: local_sgd(spec.loss_fn, params, b, sim.gamma,
+                                    sim.local_steps), (imgs, labs))
+            new_params = masked_aggregate(params, updated, sel_valid,
+                                          q_sel, n, sim.aggregation, wire)
         return (new_params, pol_state, ch_state, t_comm, power,
                 jnp.sum(sel))
 
@@ -228,13 +252,13 @@ def eval_rounds(rounds: int, eval_every: int) -> list:
 # --------------------------------------------------------------------------
 
 def make_eval_fn(ds: FederatedDataset, sim: SimConfig):
-    """Test-set accuracy on the (static) eval slice."""
-    ev_imgs = ds.test_images[: sim.eval_size]
+    """Test-set accuracy of ``sim.model`` on the (static) eval slice."""
+    spec = make_model(sim.model, ds, **dict(sim.model_params))
+    ev_inputs = ds.test_images[: sim.eval_size]
     ev_labels = ds.test_labels[: sim.eval_size]
 
     def eval_fn(params):
-        logits = apply_cnn(params, ev_imgs)
-        return jnp.mean(jnp.argmax(logits, -1) == ev_labels)
+        return spec.eval_fn(params, ev_inputs, ev_labels)
 
     return eval_fn
 

@@ -40,7 +40,6 @@ agree to ~1 ulp, not to the bit.
 from __future__ import annotations
 
 import dataclasses
-import inspect
 import itertools
 from typing import Dict, Tuple
 
@@ -50,11 +49,6 @@ import numpy as np
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
-try:  # jax >= 0.5 promotes shard_map out of experimental
-    from jax import shard_map as _shard_map
-except ImportError:
-    from jax.experimental.shard_map import shard_map as _shard_map
-
 from repro.core import ChannelConfig, SchedulerConfig, resolve_sigmas
 from repro.core.channel import CHANNEL_MODELS
 from repro.core.policies import POLICIES, init_policy_state, make_policy
@@ -62,20 +56,7 @@ from repro.data.synthetic import FederatedDataset
 from repro.fl.engine import (CHANNEL_INIT_TAG, SimConfig, eval_rounds,
                              make_eval_fn, make_round_core, make_solve_fn,
                              run_config_chunks)
-
-
-def shard_map(f, *, mesh, in_specs, out_specs):
-    """`shard_map` with the replication check off, across jax versions.
-
-    jax 0.4.x spells the flag ``check_rep``; the promoted ``jax.shard_map``
-    renamed it to ``check_vma``. The check must stay off: the grid's cell
-    bodies close over unpartitioned dataset constants.
-    """
-    flags = inspect.signature(_shard_map).parameters
-    kw = ({"check_rep": False} if "check_rep" in flags
-          else {"check_vma": False} if "check_vma" in flags else {})
-    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                      **kw)
+from repro.fl.sharding import shard_map
 
 
 def _normalize(entries) -> Tuple[Tuple[str, tuple], ...]:
@@ -165,6 +146,12 @@ def make_grid_runner(ds: FederatedDataset, sim: SimConfig,
     unless you need to warm/reuse the compiled runner (benchmarks do).
     """
     spec.validate()
+    if sim.participant_shards:
+        raise ValueError(
+            "the grid shards the CONFIG axis across the mesh; nesting the "
+            "participant-sharded round inside it is not supported — use "
+            "sim.participant_shards with run_simulation, or the grid with "
+            "participant_shards=0")
     n = scfg.n_clients
     devices = list(devices if devices is not None else jax.devices())
     mesh = Mesh(np.array(devices), ("grid",))

@@ -17,14 +17,25 @@ At pod scale (`make_fl_train_step`) the client axis is the mesh 'pod' axis:
 params broadcast to per-pod replicas, vmapped local steps, and the weighted
 mean over the pod dim lowers to the cross-pod all-reduce — the expensive,
 *scheduled* collective the paper's Algorithm 2 controls.
+
+`make_sharded_round_update` is that idea inside the simulation engines: the
+<= m_cap sampled participants are sharded across a 'part' device mesh axis
+(one `shard_map`, per-device `lax.map`, psum aggregate), with the
+variance-reduced delta form putting `wire_dtype` (bf16) bytes on the
+all-reduce wire. `SimConfig(participant_shards=D)` turns it on.
 """
 
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.fl.sharding import shard_map
 
 
 def local_sgd(loss_fn: Callable, params, batches, gamma: float, steps: int):
@@ -102,6 +113,121 @@ def fl_round(loss_fn: Callable, params, client_batches, selected, q,
     updated = jax.vmap(lambda p, b: local_sgd(loss_fn, p, b, gamma, steps))(
         bparams, client_batches)
     return weighted_aggregate(params, updated, selected, q)
+
+
+def masked_aggregate(params, updated, sel_valid, q_sel, n_clients,
+                     aggregation: str = "paper", wire_dtype=jnp.float32,
+                     axis_name=None):
+    """Algorithm 1 line 7 over the <= m_cap MATERIALIZED participants.
+
+    The simulation-side form of :func:`weighted_aggregate` /
+    :func:`delta_aggregate`: ``updated`` carries only the gathered
+    participants (leading axis m_cap), masked by ``sel_valid`` and weighted
+    by 1/(N q). ``wire_dtype`` applies to the delta form only — the
+    per-participant weighted deltas are cast to it before the
+    cross-participant sum (the quantity a real deployment puts on the
+    wire). ``axis_name`` turns the local sum into a per-shard partial
+    completed by a ``psum`` over that mesh axis — the participant-sharded
+    round's collective; the cast-before-psum order is what puts
+    ``wire_dtype`` bytes on the links. One home for this math: the scan
+    engine (axis_name=None), the shard_map round (axis_name='part'), and
+    the grid all call here. (The legacy loop engine keeps its own copy BY
+    DESIGN — it is the independently-implemented parity reference.)
+    """
+    w = sel_valid.astype(jnp.float32) / jnp.maximum(q_sel, 1e-9) / n_clients
+
+    def reduce(x):
+        return x if axis_name is None else jax.lax.psum(x, axis_name)
+
+    if aggregation == "delta":
+        def agg(x, y):
+            wf = w.reshape((-1,) + (1,) * (y.ndim - 1))
+            delta = y.astype(jnp.float32) - x.astype(jnp.float32)[None]
+            update = reduce(jnp.sum((delta * wf).astype(wire_dtype), axis=0))
+            return x.astype(jnp.float32) + update.astype(jnp.float32)
+
+        return jax.tree.map(agg, params, updated)
+
+    def agg(y):
+        wf = w.reshape((-1,) + (1,) * (y.ndim - 1))
+        return reduce(jnp.sum(y.astype(jnp.float32) * wf, axis=0))
+
+    return jax.tree.map(agg, updated)
+
+
+def make_sharded_round_update(loss_fn: Callable, gamma: float, steps: int,
+                              n_clients: int, n_shards: int, *,
+                              aggregation: str = "paper",
+                              wire_dtype=jnp.float32,
+                              devices: Optional[list] = None) -> Callable:
+    """Participant-sharded round update: the <= m_cap materialized
+    participants' local-SGD runs as ONE ``shard_map`` over a participant
+    mesh axis, and the q-weighted Algorithm-1 aggregate lowers to a
+    cross-device all-reduce (``psum``) — the *scheduled* collective the
+    paper's Algorithm 2 prices.
+
+    Returns ``update(params, inputs, labels, sel_valid, q_sel) ->
+    new_params`` where ``inputs``/``labels`` carry the participant axis
+    leading ((m_cap, steps, batch, ...)). Each of the ``n_shards`` devices
+    runs its m_cap/n_shards participants sequentially under ``lax.map``
+    (the conv-friendly idiom — vmapped convs hit XLA:CPU's grouped-conv
+    slow path), reduces its shard to a partial weighted sum, and the
+    ``psum`` over the 'part' axis completes line 7 of Algorithm 1.
+
+    ``aggregation="delta"`` is the variance-reduced form of
+    :func:`delta_aggregate`, and here its bf16 wire design finally meets a
+    real wire: per-device partial delta sums are cast to ``wire_dtype``
+    BEFORE the psum, so the cross-device all-reduce moves ``wire_dtype``
+    (bf16 = half the bytes of the paper-literal fp32 average).
+    ``wire_dtype=float32`` keeps the math identical to the sequential
+    engine's.
+
+    Parity contract (tests/test_round_sharded.py): at mesh size 1 the
+    update is BITWISE-identical to the sequential ``lax.map`` + masked
+    aggregate path — same trip count, same single-sum reduction, and a
+    size-1 psum is the identity. Across mesh sizes the reduction is
+    re-associated per shard, so trajectories agree only to ~1 ulp/round
+    (amplified through training), like the grid's per-mesh contract.
+
+    If m_cap is not a multiple of ``n_shards`` the participant axis is
+    padded with zero-weight rows (``sel_valid=False``, q=1) — padded rows
+    train on zero data and contribute exactly 0 to the aggregate.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    if not 1 <= n_shards <= len(devices):
+        raise ValueError(f"n_shards={n_shards} needs 1..{len(devices)} "
+                         f"of the available devices")
+    mesh = Mesh(np.array(devices[:n_shards]), ("part",))
+
+    def shard_body(params, inputs, labels, sel_valid, q_sel):
+        updated = jax.lax.map(
+            lambda b: local_sgd(loss_fn, params, b, gamma, steps),
+            (inputs, labels))
+        return masked_aggregate(params, updated, sel_valid, q_sel,
+                                n_clients, aggregation, wire_dtype,
+                                axis_name="part")
+
+    sharded = shard_map(
+        shard_body, mesh=mesh,
+        in_specs=(P(), P("part"), P("part"), P("part"), P("part")),
+        out_specs=P())
+
+    def update(params, inputs, labels, sel_valid, q_sel):
+        m = sel_valid.shape[0]
+        pad = (-m) % n_shards
+        if pad:
+            inputs = jnp.concatenate(
+                [inputs, jnp.zeros((pad,) + inputs.shape[1:],
+                                   inputs.dtype)], axis=0)
+            labels = jnp.concatenate(
+                [labels, jnp.zeros((pad,) + labels.shape[1:],
+                                   labels.dtype)], axis=0)
+            sel_valid = jnp.concatenate(
+                [sel_valid, jnp.zeros((pad,), sel_valid.dtype)])
+            q_sel = jnp.concatenate([q_sel, jnp.ones((pad,), q_sel.dtype)])
+        return sharded(params, inputs, labels, sel_valid, q_sel)
+
+    return update
 
 
 def make_fl_train_step(loss_fn: Callable, gamma: float, steps: int,

@@ -1,0 +1,25 @@
+"""shard_map compatibility shim shared by the grid and the sharded round.
+
+jax >= 0.5 promotes ``shard_map`` out of experimental and renames the
+replication-check flag (``check_rep`` -> ``check_vma``). Both callers need
+the check OFF: their bodies close over unpartitioned constants (dataset
+arrays, configs) that the checker cannot prove replicated.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.5 promotes shard_map out of experimental
+    from jax import shard_map as _shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with the replication check off, across jax versions."""
+    flags = inspect.signature(_shard_map).parameters
+    kw = ({"check_rep": False} if "check_rep" in flags
+          else {"check_vma": False} if "check_vma" in flags else {})
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

@@ -1,10 +1,12 @@
 """End-to-end wireless-FL simulation — the engine behind Figs. 2-5.
 
 Couples all the substrates: Rayleigh channel draws -> Algorithm-2 scheduling
-(or the M-matched uniform baseline) -> Algorithm-1 federated round on the
-paper's CNN -> TDMA communication-time accounting. Computation time is
-excluded from the clock, as in Section VI ("we assume that the computation
-time is much less than communication time").
+(or the M-matched uniform baseline) -> Algorithm-1 federated round on any
+registered model (``SimConfig.model``: the paper's CNN, an MLP, or the
+transformer LM — ``repro.models.registry``) -> TDMA communication-time
+accounting. Computation time is excluded from the clock, as in Section VI
+("we assume that the computation time is much less than communication
+time").
 
 ``run_simulation`` dispatches on ``SimConfig.engine``:
 
@@ -33,10 +35,10 @@ from repro.core import (ChannelConfig, SchedulerConfig, channel_rate,
                         draw_gains, estimate_avg_selected, init_state,
                         schedule_step, uniform_selection)
 from repro.data.synthetic import FederatedDataset
-from repro.fl.engine import (SimConfig, make_solve_fn, run_simulation_scan,
-                             run_sweep)
+from repro.fl.engine import (SimConfig, make_solve_fn, resolve_wire_dtype,
+                             run_simulation_scan, run_sweep)
 from repro.fl.round import local_sgd
-from repro.models.cnn import apply_cnn, cnn_loss
+from repro.models.registry import make_model
 
 __all__ = ["SimConfig", "run_simulation", "run_simulation_loop",
            "run_simulation_scan", "run_sweep", "make_solve_fn",
@@ -48,10 +50,13 @@ def _select_proposed(key, gains, sched_state, scfg, ch):
     return sel, q, p, new_state
 
 
-def _round_update(params, sel_idx, sel_valid, q_sel, batches, gamma, steps,
-                  n_clients, aggregation="paper"):
+def _round_update(loss_fn, params, sel_idx, sel_valid, q_sel, batches, gamma,
+                  steps, n_clients, aggregation="paper",
+                  wire_dtype=jnp.float32):
     """Aggregate x <- (1/N) sum_{i in sel} (1/q_i) y_i over <= m_cap clients
-    (paper), or the variance-reduced delta form x + (1/N) sum (1/q)(y - x).
+    (paper), or the variance-reduced delta form x + (1/N) sum (1/q)(y - x)
+    whose summand is cast to ``wire_dtype`` before the reduce (the bf16
+    wire design of fl/round.py::delta_aggregate; float32 = historic math).
 
     Clients are iterated with lax.map (sequential) rather than vmap: vmapping
     convolutions over per-client weights lowers to grouped convolutions,
@@ -59,14 +64,15 @@ def _round_update(params, sel_idx, sel_valid, q_sel, batches, gamma, steps,
     the fast kernel; on TPU the FL pod path uses vmap (repro/fl/round.py).
     """
     updated = jax.lax.map(
-        lambda b: local_sgd(cnn_loss, params, b, gamma, steps), batches)
+        lambda b: local_sgd(loss_fn, params, b, gamma, steps), batches)
     w = sel_valid.astype(jnp.float32) / jnp.maximum(q_sel, 1e-9) / n_clients
 
     if aggregation == "delta":
         def agg(x, y):
             wf = w.reshape((-1,) + (1,) * (y.ndim - 1))
             delta = y.astype(jnp.float32) - x.astype(jnp.float32)[None]
-            return x.astype(jnp.float32) + jnp.sum(delta * wf, axis=0)
+            update = jnp.sum((delta * wf).astype(wire_dtype), axis=0)
+            return x.astype(jnp.float32) + update.astype(jnp.float32)
 
         return jax.tree.map(agg, params, updated)
 
@@ -95,6 +101,10 @@ def run_simulation(key, params, ds: FederatedDataset, sim: SimConfig,
             "the legacy loop engine only knows the paper's setup "
             "(channel='rayleigh', policy in {'proposed', 'uniform'}); use "
             "engine='scan' for registry channels/policies")
+    if sim.participant_shards:
+        raise ValueError(
+            "the legacy loop engine is the sequential parity reference; "
+            "participant sharding needs engine='scan'")
     return run_simulation_loop(key, params, ds, sim, scfg, ch, sigmas)
 
 
@@ -106,13 +116,14 @@ def run_simulation_loop(key, params, ds: FederatedDataset, sim: SimConfig,
     n = ds.n_clients
     m_cap = sim.m_cap
     sched_state = init_state(scfg)
+    spec = make_model(sim.model, ds, **dict(sim.model_params))
+    wire = resolve_wire_dtype(sim.wire_dtype)
     # sim_round donates its params buffer; copy so callers keep theirs.
     params = jax.tree.map(jnp.array, params)
 
     @jax.jit
-    def eval_acc(params, imgs, labels):
-        logits = apply_cnn(params, imgs)
-        return jnp.mean(jnp.argmax(logits, -1) == labels)
+    def eval_acc(params, inputs, labels):
+        return spec.eval_fn(params, inputs, labels)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def sim_round(params, sched_state, key):
@@ -138,9 +149,10 @@ def run_simulation_loop(key, params, ds: FederatedDataset, sim: SimConfig,
             k_bat, (m_cap, sim.local_steps, sim.batch), 0, per_client)
         imgs = ds.client_images[sel_idx[:, None, None], idx]
         labs = ds.client_labels[sel_idx[:, None, None], idx]
-        new_params = _round_update(params, sel_idx, sel_valid, q_sel,
-                                   (imgs, labs), sim.gamma, sim.local_steps,
-                                   n, sim.aggregation)
+        new_params = _round_update(spec.loss_fn, params, sel_idx, sel_valid,
+                                   q_sel, (imgs, labs), sim.gamma,
+                                   sim.local_steps, n, sim.aggregation,
+                                   wire)
         return new_params, sched_state, t_comm, power, jnp.sum(sel)
 
     hist: Dict[str, List] = {"round": [], "comm_time": [], "test_acc": [],
@@ -174,20 +186,43 @@ def match_uniform_m(key, sigmas, scfg: SchedulerConfig, ch: ChannelConfig,
 
     ``channel`` picks the fading model the estimate runs under — match M
     against the channel you will actually sweep, or the "M-matched"
-    baseline is matched to the wrong gain distribution.
+    baseline is matched to the wrong gain distribution. ``channel_params``
+    are the registry extras (``k_factor``, ``shadow_db``, ``rho``); passing
+    them with ``channel="rayleigh"`` is rejected rather than silently
+    ignored (rayleigh takes none — a misspelled channel name would
+    otherwise produce a silently mis-matched M).
     """
     from repro.core import make_channel
+    from repro.core.channel import CHANNEL_MODELS
 
-    chan = (None if channel == "rayleigh" else
-            make_channel(channel, sigmas, ch, **dict(channel_params)))
+    if channel not in CHANNEL_MODELS:
+        raise ValueError(f"unknown channel model {channel!r} "
+                         f"(registered: {sorted(CHANNEL_MODELS)})")
+    if channel == "rayleigh":
+        if channel_params:
+            raise ValueError(
+                "channel='rayleigh' takes no channel_params; got "
+                f"{dict(channel_params)!r} — did you mean a registry "
+                "channel (rician/lognormal/gauss_markov)?")
+        chan = None
+    else:
+        chan = make_channel(channel, sigmas, ch, **dict(channel_params))
     return float(estimate_avg_selected(key, sigmas, scfg, ch, rounds,
                                        channel=chan))
 
 
 def time_to_accuracy(hist: Dict[str, np.ndarray], target: float
                      ) -> Optional[float]:
-    """First cumulative comm time at which test_acc >= target."""
-    idx = np.nonzero(hist["test_acc"] >= target)[0]
+    """First cumulative comm time at which test_acc >= target.
+
+    Returns None when the target is never reached, including for an empty
+    history. Accepts plain-list histories (hand-built or JSON-roundtripped)
+    as well as the engines' ndarray ones — a list crashed the ``>=`` before.
+    """
+    acc = np.asarray(hist["test_acc"], dtype=np.float64)
+    if acc.size == 0:
+        return None
+    idx = np.nonzero(acc >= target)[0]
     if idx.size == 0:
         return None
-    return float(hist["comm_time"][idx[0]])
+    return float(np.asarray(hist["comm_time"], dtype=np.float64)[idx[0]])

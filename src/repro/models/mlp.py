@@ -1,0 +1,58 @@
+"""Plain MLP for the federated simulation's model registry.
+
+The paper's experiments use only the two-conv CNN (models/cnn.py); the MLP
+is the cheapest registry entry — a flatten + two dense layers — so engine
+tests, unbiasedness suites, and benchmarks can exercise the round machinery
+without paying conv compute. Same functional conventions as the CNN: params
+are a flat dict of f32 arrays, ``mlp_loss(params, (images, labels))`` is the
+scan-friendly training objective.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    height: int
+    width: int
+    channels: int
+    n_classes: int
+    hidden: int = 64
+
+    @property
+    def d_in(self) -> int:
+        return self.height * self.width * self.channels
+
+
+def init_mlp(key, cfg: MLPConfig):
+    k1, k2 = jax.random.split(key)
+
+    def dense_init(k, d_in, d_out):
+        return (jax.random.truncated_normal(k, -2, 2, (d_in, d_out))
+                * (2.0 / d_in) ** 0.5).astype(jnp.float32)
+
+    return {
+        "w1": dense_init(k1, cfg.d_in, cfg.hidden),
+        "b1": jnp.zeros((cfg.hidden,), jnp.float32),
+        "w2": dense_init(k2, cfg.hidden, cfg.n_classes),
+        "b2": jnp.zeros((cfg.n_classes,), jnp.float32),
+    }
+
+
+def apply_mlp(params, images):
+    """images (B, H, W, C) -> logits (B, n_classes)."""
+    x = images.reshape(images.shape[0], -1)
+    x = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return x @ params["w2"] + params["b2"]
+
+
+def mlp_loss(params, batch):
+    """batch = (images, labels). Mean cross-entropy."""
+    images, labels = batch
+    logp = jax.nn.log_softmax(apply_mlp(params, images))
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))

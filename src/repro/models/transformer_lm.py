@@ -1,0 +1,91 @@
+"""Small decoder-only transformer LM for the federated model registry.
+
+Built from the production blocks (``models/attention.py`` grouped-query
+attention with RoPE, ``models/layers.py`` RMSNorm/SwiGLU) at federated-
+client scale: a few layers, tied embeddings, full fp32. The federated token
+data comes from ``data/synthetic.py`` (``make_token_stream`` /
+``make_lm_federated``); batches are ``(tokens, next_tokens)`` pairs with
+shape (B, S) int32 each, so ``lm_loss`` slots into ``local_sgd`` exactly
+like the image models' loss does.
+
+The layer stack is a Python loop over per-layer param dicts (not the
+period-scan of ``models/model.py``): federated clients run 2-4 layers, where
+O(n_layers) lowering is irrelevant and the flat structure keeps the pytree
+friendly to `jax.lax.map` over per-client replicas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import apply_attention, init_attention
+from repro.models.config import ModelConfig
+from repro.models.layers import (apply_embedding, apply_rmsnorm,
+                                 apply_swiglu, init_embedding, init_rmsnorm,
+                                 init_swiglu)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    vocab: int
+    d_model: int = 32
+    n_heads: int = 2
+    n_layers: int = 2
+    d_ff: int = 64
+
+    def model_config(self) -> ModelConfig:
+        """The attention blocks consume the zoo's ModelConfig."""
+        return ModelConfig(
+            name="fed_lm", arch_type="dense", n_layers=self.n_layers,
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_heads, d_ff=self.d_ff, vocab_size=self.vocab)
+
+
+def init_lm(key, cfg: LMConfig):
+    mcfg = cfg.model_config()
+    k_emb, key = jax.random.split(key)
+    layers = []
+    for _ in range(cfg.n_layers):
+        k_attn, k_mlp, key = jax.random.split(key, 3)
+        layers.append({
+            "ln1": init_rmsnorm(cfg.d_model, jnp.float32),
+            "attn": init_attention(k_attn, mcfg, jnp.float32),
+            "ln2": init_rmsnorm(cfg.d_model, jnp.float32),
+            "mlp": init_swiglu(k_mlp, cfg.d_model, cfg.d_ff, jnp.float32),
+        })
+    return {
+        "emb": init_embedding(k_emb, cfg.vocab, cfg.d_model, jnp.float32),
+        "layers": layers,
+        "lnf": init_rmsnorm(cfg.d_model, jnp.float32),
+    }
+
+
+def apply_lm(params, tokens, cfg: LMConfig):
+    """tokens (B, S) int32 -> next-token logits (B, S, vocab).
+
+    Causal attention, tied input/output embeddings.
+    """
+    mcfg = cfg.model_config()
+    x = apply_embedding(params["emb"], tokens)
+    for layer in params["layers"]:
+        x = x + apply_attention(layer["attn"], apply_rmsnorm(layer["ln1"], x),
+                                mcfg, causal=True)
+        x = x + apply_swiglu(layer["mlp"], apply_rmsnorm(layer["ln2"], x))
+    x = apply_rmsnorm(params["lnf"], x)
+    return x @ params["emb"]["emb"].T
+
+
+def lm_loss(params, batch, cfg: LMConfig):
+    """batch = (tokens, next_tokens), each (B, S) int32. Mean next-token CE."""
+    tokens, targets = batch
+    logp = jax.nn.log_softmax(apply_lm(params, tokens, cfg))
+    return -jnp.mean(jnp.take_along_axis(logp, targets[..., None], axis=-1))
+
+
+def lm_accuracy(params, tokens, targets, cfg: LMConfig):
+    """Mean next-token top-1 accuracy over (T, S) token/target arrays."""
+    preds = jnp.argmax(apply_lm(params, tokens, cfg), axis=-1)
+    return jnp.mean(preds == targets)

@@ -8,7 +8,8 @@ import pytest
 from repro.core import (ChannelConfig, SchedulerConfig, heterogeneous_sigmas,
                         homogeneous_sigmas)
 from repro.data.synthetic import make_cifar10_like, make_femnist_like
-from repro.fl.simulation import SimConfig, run_simulation, match_uniform_m
+from repro.fl.simulation import (SimConfig, match_uniform_m, run_simulation,
+                                 time_to_accuracy)
 from repro.models.cnn import CNNConfig, init_cnn
 
 
@@ -66,6 +67,52 @@ def test_proposed_beats_uniform_comm_time_heterogeneous(small_setup):
     # per-round comm time should be clearly lower for the proposed policy
     assert hp["comm_time"][-1] < hu["comm_time"][-1], (
         hp["comm_time"][-1], hu["comm_time"][-1])
+
+
+def test_time_to_accuracy_edge_cases():
+    """Empty history and never-reached targets return None (no crash); a
+    plain-list history (hand-built / JSON-roundtripped) works like the
+    engines' ndarray one."""
+    assert time_to_accuracy({"test_acc": [], "comm_time": []}, 0.5) is None
+    assert time_to_accuracy({"test_acc": np.asarray([]),
+                             "comm_time": np.asarray([])}, 0.5) is None
+    hist = {"test_acc": [0.1, 0.4, 0.6], "comm_time": [1.0, 2.0, 3.0]}
+    assert time_to_accuracy(hist, 0.9) is None          # never reached
+    assert time_to_accuracy(hist, 0.5) == 3.0           # first crossing
+    assert time_to_accuracy(hist, 0.4) == 2.0           # >= is inclusive
+    np_hist = {k: np.asarray(v) for k, v in hist.items()}
+    assert time_to_accuracy(np_hist, 0.5) == 3.0
+
+
+def test_match_uniform_m_registry_channels():
+    """M-matching runs under every registered fading model (the estimate
+    must reflect the channel actually swept) and yields a plausible level;
+    rayleigh with leftover channel_params is rejected instead of silently
+    matching the wrong model."""
+    import pytest
+
+    n = 30
+    ch = ChannelConfig(n_clients=n)
+    scfg = SchedulerConfig(n_clients=n, model_bits=32 * 50000.0)
+    sig = heterogeneous_sigmas(n)
+    key = jax.random.PRNGKey(0)
+    for channel, params in [("rician", (("k_factor", 3.0),)),
+                            ("lognormal", (("shadow_db", 6.0),)),
+                            ("gauss_markov", (("rho", 0.9),))]:
+        m = match_uniform_m(key, sig, scfg, ch, rounds=60, channel=channel,
+                            channel_params=params)
+        assert np.isfinite(m) and 0.0 < m <= n, (channel, m)
+    # same stationary gain law: gauss_markov's M ~ rayleigh's M
+    m_ray = match_uniform_m(key, sig, scfg, ch, rounds=120)
+    m_gm = match_uniform_m(key, sig, scfg, ch, rounds=120,
+                           channel="gauss_markov",
+                           channel_params=(("rho", 0.5),))
+    assert abs(m_gm - m_ray) < 0.35 * m_ray, (m_gm, m_ray)
+    with pytest.raises(ValueError, match="no channel_params"):
+        match_uniform_m(key, sig, scfg, ch, rounds=10,
+                        channel_params=(("rho", 0.9),))
+    with pytest.raises(ValueError, match="unknown channel"):
+        match_uniform_m(key, sig, scfg, ch, rounds=10, channel="awgn")
 
 
 def test_femnist_like_noniid_structure():

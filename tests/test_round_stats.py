@@ -1,0 +1,194 @@
+"""Statistical tests of the paper's aggregation invariants (Theorem 1).
+
+Algorithm 1 line 7 is only correct because E[I_n/q_n] = 1 makes the
+q-weighted aggregate an unbiased estimate of the all-client average; the
+variance-reduced delta form shares the expectation but must have strictly
+lower variance. Both properties are Monte-Carlo facts, checked here over
+many fixed-seed selection draws with tolerances DERIVED from the sample
+count (z * analytic-sigma / sqrt(S)), so the confidence interval scales
+with whatever sample budget the run uses and the assertion stays
+deterministic.
+
+Sample budget: ``REPRO_STATS_SAMPLES`` (default 400). The tests carry the
+``stats`` marker; the nightly CI leg re-runs them with a 10x budget, which
+tightens the CI by ~3x — a bias that hides at S=400 fails at S=4000.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import make_cifar10_like, make_lm_federated
+from repro.fl.round import delta_aggregate, weighted_aggregate
+from repro.models.registry import make_model
+
+N = 24            # clients
+Z = 4.5           # CI width in sigmas (deterministic under fixed seeds)
+S = int(os.environ.get("REPRO_STATS_SAMPLES", "400"))
+
+pytestmark = pytest.mark.stats
+
+
+def _q_vector(key):
+    """Heterogeneous selection probabilities bounded away from 0."""
+    return 0.05 + 0.9 * jax.random.uniform(key, (N,), dtype=jnp.float32)
+
+
+def _selection_draws(key, q, s):
+    return jax.random.uniform(key, (s, N)) < q[None, :]
+
+
+def _flat_clients(key, d=64, spread=1.0, center=None):
+    """(N, d) client vectors y_n around an optional center x."""
+    y = spread * jax.random.normal(key, (N, d), dtype=jnp.float32)
+    if center is not None:
+        y = y + center[None]
+    return y
+
+
+def test_weighted_aggregate_unbiased():
+    """E[(1/N) sum (I/q) y] = all-client mean, within Z/sqrt(S) CI."""
+    key = jax.random.PRNGKey(0)
+    q = _q_vector(jax.random.fold_in(key, 1))
+    y = _flat_clients(jax.random.fold_in(key, 2))
+    x = jnp.zeros_like(y[0])
+    sels = _selection_draws(jax.random.fold_in(key, 3), q, S)
+
+    est = jax.vmap(lambda s: weighted_aggregate(x, y, s, q))(sels)
+    est = np.asarray(est, np.float64)                        # (S, d)
+    truth = np.mean(np.asarray(y, np.float64), axis=0)
+
+    # per-coordinate analytic std of ONE draw: Var = (1/N^2) sum (1-q)/q y^2
+    var1 = np.sum(((1 - np.asarray(q)) / np.asarray(q))[:, None]
+                  * np.asarray(y, np.float64) ** 2, axis=0) / N ** 2
+    se = np.sqrt(var1 / S)
+    bias = est.mean(axis=0) - truth
+    assert np.all(np.abs(bias) <= Z * se + 1e-12), (
+        np.abs(bias / np.maximum(se, 1e-12)).max())
+
+
+def test_delta_aggregate_unbiased_and_lower_variance():
+    """The delta form estimates the same mean with strictly lower empirical
+    variance when client updates stay near the global model (the FL regime:
+    y_n = x + small local drift)."""
+    key = jax.random.PRNGKey(1)
+    q = _q_vector(jax.random.fold_in(key, 1))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (64,),
+                          dtype=jnp.float32) * 5.0
+    # local drift << |x|: exactly when delta's (y - x) beats re-estimating y
+    y = _flat_clients(jax.random.fold_in(key, 3), spread=0.05, center=x)
+    sels = _selection_draws(jax.random.fold_in(key, 4), q, S)
+
+    est_paper = np.asarray(jax.vmap(
+        lambda s: weighted_aggregate(x, y, s, q))(sels), np.float64)
+    # float32 wire isolates the estimator's variance from bf16 rounding
+    est_delta = np.asarray(jax.vmap(
+        lambda s: delta_aggregate(x, y, s, q, wire_dtype=jnp.float32))(sels),
+        np.float64)
+
+    truth = np.mean(np.asarray(y, np.float64), axis=0)
+    var1 = np.sum(((1 - np.asarray(q)) / np.asarray(q))[:, None]
+                  * (np.asarray(y, np.float64)
+                     - np.asarray(x, np.float64)[None]) ** 2, axis=0) / N ** 2
+    se = np.sqrt(var1 / S)
+    bias = est_delta.mean(axis=0) - truth
+    assert np.all(np.abs(bias) <= Z * se + 1e-12), (
+        np.abs(bias / np.maximum(se, 1e-12)).max())
+
+    v_paper = est_paper.var(axis=0).mean()
+    v_delta = est_delta.var(axis=0).mean()
+    assert v_delta < v_paper, (v_delta, v_paper)
+    # the gap is structural (|y| >> |y - x|), not a borderline win
+    assert v_delta < 0.01 * v_paper, (v_delta, v_paper)
+
+
+def test_delta_bf16_wire_stays_unbiased_within_quantization():
+    """The bf16 wire adds quantization noise but no detectable bias: the
+    empirical mean stays within the sampling CI plus one bf16 ulp of the
+    update magnitude."""
+    key = jax.random.PRNGKey(2)
+    q = _q_vector(jax.random.fold_in(key, 1))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (64,),
+                          dtype=jnp.float32)
+    y = _flat_clients(jax.random.fold_in(key, 3), spread=0.05, center=x)
+    sels = _selection_draws(jax.random.fold_in(key, 4), q, S)
+
+    est = np.asarray(jax.vmap(
+        lambda s: delta_aggregate(x, y, s, q))(sels), np.float64)
+    truth = np.mean(np.asarray(y, np.float64), axis=0)
+    var1 = np.sum(((1 - np.asarray(q)) / np.asarray(q))[:, None]
+                  * (np.asarray(y, np.float64)
+                     - np.asarray(x, np.float64)[None]) ** 2, axis=0) / N ** 2
+    se = np.sqrt(var1 / S)
+    # bf16 keeps 8 mantissa bits: one ulp of the per-term update magnitude
+    ulp = 2.0 ** -8 * np.max(np.abs(np.asarray(y - x[None], np.float64))
+                             / np.asarray(q)[:, None] / N, axis=0)
+    bias = est.mean(axis=0) - truth
+    assert np.all(np.abs(bias) <= Z * se + ulp + 1e-12)
+
+
+@pytest.mark.parametrize("model,make_ds,params", [
+    ("cnn", make_cifar10_like, {"conv1": 4, "conv2": 8, "hidden": 16}),
+    ("mlp", make_cifar10_like, {}),
+    ("transformer_lm", make_lm_federated, {}),
+])
+def test_aggregate_unbiased_on_registry_model_pytrees(model, make_ds,
+                                                      params):
+    """Unbiasedness through the REAL pytrees every registry model
+    federates: per-client params = global init + small drift, aggregated by
+    both forms over selection draws. Ties the statistical contract to each
+    model's actual parameter structure (nested dicts, lists of layers,
+    tied embeddings) rather than a flat toy vector."""
+    key = jax.random.PRNGKey(3)
+    if model == "transformer_lm":
+        ds = make_ds(key, n_clients=N, per_client=8, seq=8, vocab=16,
+                     n_test=32)
+    else:
+        ds = make_ds(key, n_clients=N, per_client=8, n_test=32, h=8, w=8)
+    spec = make_model(model, ds, **params)
+    x = spec.init_fn(jax.random.fold_in(key, 1))
+
+    def perturb(k):
+        leaves, treedef = jax.tree.flatten(x)
+        ks = jax.random.split(k, len(leaves))
+        return jax.tree.unflatten(treedef, [
+            leaf + 0.02 * jax.random.normal(kk, leaf.shape, leaf.dtype)
+            for leaf, kk in zip(leaves, ks)])
+
+    y = jax.tree.map(lambda *ls: jnp.stack(ls),
+                     *[perturb(k) for k in
+                       jax.random.split(jax.random.fold_in(key, 2), N)])
+    q = _q_vector(jax.random.fold_in(key, 3))
+    s = max(64, S // 4)         # pytree draws cost more; CI scales with S
+    sels = _selection_draws(jax.random.fold_in(key, 4), q, s)
+
+    for is_delta, agg_fn in (
+            (False, weighted_aggregate),
+            (True, lambda g, c, sel, qq: delta_aggregate(
+                g, c, sel, qq, wire_dtype=jnp.float32))):
+        est = jax.vmap(lambda sel: agg_fn(x, y, sel, q))(sels)
+        for e_leaf, y_leaf, x_leaf in zip(jax.tree.leaves(est),
+                                          jax.tree.leaves(y),
+                                          jax.tree.leaves(x)):
+            e = np.asarray(e_leaf, np.float64).reshape(s, -1)
+            yl = np.asarray(y_leaf, np.float64).reshape(N, -1)
+            truth = yl.mean(axis=0)
+            # each form's OWN sampling variance: the weighted form
+            # re-estimates y (y^2 term), the delta form only the drift
+            # ((y-x)^2 term, much smaller here) — using y^2 for delta
+            # would inflate its CI ~|y|/|y-x| and hide real bias
+            dev = (yl - np.asarray(x_leaf, np.float64).reshape(1, -1)
+                   if is_delta else yl)
+            var1 = np.sum((1 - np.asarray(q))[:, None]
+                          / np.asarray(q)[:, None] * dev ** 2,
+                          axis=0) / N ** 2
+            se = np.sqrt(var1 / s)
+            bias = e.mean(axis=0) - truth
+            # the aggregates cast back to f32: allow one f32 ulp slack
+            slack = np.abs(truth) * 2.0 ** -23 + 1e-9
+            assert np.all(np.abs(bias) <= Z * se + slack), (
+                model, is_delta,
+                np.abs(bias / np.maximum(se, 1e-12)).max())

@@ -8,7 +8,7 @@ from _hyp import given, settings, st
 from repro.core import (ChannelConfig, SchedulerConfig, draw_gains,
                         heterogeneous_sigmas, homogeneous_sigmas, init_state,
                         sample_selection, solve_round, update_queues)
-from repro.core.scheduler import _objective
+from repro.core.scheduler import _objective, solve_candidates
 
 CH = ChannelConfig(n_clients=100)
 CFG = SchedulerConfig(n_clients=100, model_bits=32 * 555178.0, lam=10.0,
@@ -49,6 +49,94 @@ def test_closed_form_beats_grid(gain, z, lam):
     # closed form should be at least as good as the grid (small tolerance
     # because the grid is finite)
     assert f_opt <= f_best + 1e-3 * (abs(f_best) + 1.0)
+
+
+@settings(deadline=None, max_examples=80)
+@given(st.floats(min_value=1.0, max_value=1e6),      # V
+       st.floats(min_value=0.1, max_value=1e3),      # lambda
+       st.floats(min_value=1.0, max_value=1e3),      # Pmax
+       st.floats(min_value=1e-3, max_value=1e3),     # gain
+       st.floats(min_value=0.0, max_value=1e4))      # queue Z
+def test_theorem2_feasibility_property(v, lam, pmax, gain, z):
+    """Theorem-2 invariant over the WHOLE config space, not a fixed sweep:
+    for random (V, lam, Pmax, gain, Z) the solve must keep q in
+    [q_floor, 1] and P in [0, Pmax], all finite (the constraint set of
+    Eq. 15 that the convergence/time trade-off depends on)."""
+    cfg = SchedulerConfig(n_clients=100, model_bits=32 * 555178.0, lam=lam,
+                          V=v)
+    ch = ChannelConfig(n_clients=100, p_max=pmax)
+    q, p = solve_round(jnp.float32(gain)[None], jnp.float32(z)[None], cfg,
+                       ch)
+    q, p = float(q[0]), float(p[0])
+    # the solve is f32: its bounds are the f32 casts of the f64 configs
+    # (a drawn p_max can round UP in f32, putting the clipped P one f32
+    # ulp above the f64 value — inside the constraint as computed)
+    floor32 = float(jnp.float32(cfg.q_floor))
+    pmax32 = float(jnp.float32(pmax))
+    assert np.isfinite(q) and np.isfinite(p)
+    assert floor32 <= q <= 1.0, (q, v, lam, pmax, gain, z)
+    assert 0.0 <= p <= pmax32, (p, v, lam, pmax, gain, z)
+
+
+@settings(deadline=None, max_examples=80)
+@given(st.floats(min_value=1.0, max_value=1e6),      # V
+       st.floats(min_value=0.1, max_value=1e3),      # lambda
+       st.floats(min_value=1.0, max_value=1e3),      # Pmax
+       st.floats(min_value=1e-3, max_value=1e3),     # gain
+       st.floats(min_value=0.0, max_value=1e4))      # queue Z
+def test_candidate_choice_never_beats_itself(v, lam, pmax, gain, z):
+    """The branch-free interior/boundary selection (the Hessian-test
+    replacement) must never keep a candidate whose Eq.-15 objective is
+    worse than the one it discarded."""
+    cfg = SchedulerConfig(n_clients=100, model_bits=32 * 555178.0, lam=lam,
+                          V=v)
+    ch = ChannelConfig(n_clients=100, p_max=pmax)
+    g = jnp.float32(gain)[None]
+    zz = jnp.float32(z)[None]
+    q_int, p_int, q_bnd, p_bnd, use_int = solve_candidates(g, zz, cfg, ch)
+    f_int = float(_objective(q_int, p_int, g, zz, cfg, ch)[0])
+    f_bnd = float(_objective(q_bnd, p_bnd, g, zz, cfg, ch)[0])
+    kept, discarded = (f_int, f_bnd) if bool(use_int[0]) else (f_bnd, f_int)
+    # a non-finite discarded candidate loses by definition; the kept one
+    # must always be finite and no worse (ties go either way)
+    assert np.isfinite(kept)
+    if np.isfinite(discarded):
+        assert kept <= discarded, (kept, discarded, v, lam, pmax, gain, z)
+
+
+def test_theorem2_invariants_bulk_deterministic():
+    """Fixed-seed fallback for the two properties above: hypothesis is an
+    optional dependency (tests/_hyp.py skips the @given tests without it),
+    so this deterministic sweep — 48 random (V, lam, Pmax) configs x 64
+    (gain, Z) states each — keeps the feasibility and kept-candidate
+    invariants covered in minimal environments."""
+    rng = np.random.default_rng(42)
+    for _ in range(48):
+        v = float(10 ** rng.uniform(0, 6))
+        lam = float(10 ** rng.uniform(-1, 3))
+        pmax = float(10 ** rng.uniform(0, 3))
+        cfg = SchedulerConfig(n_clients=100, model_bits=32 * 555178.0,
+                              lam=lam, V=v)
+        ch = ChannelConfig(n_clients=100, p_max=pmax)
+        g = jnp.asarray(10 ** rng.uniform(-3, 3, 64), jnp.float32)
+        z = jnp.asarray(rng.uniform(0, 1e4, 64), jnp.float32)
+
+        q, p = solve_round(g, z, cfg, ch)
+        floor32 = np.float32(cfg.q_floor)
+        pmax32 = np.float32(pmax)
+        assert bool(jnp.all(jnp.isfinite(q)) & jnp.all(jnp.isfinite(p)))
+        assert bool(jnp.all(q >= floor32) & jnp.all(q <= 1.0)), (v, lam)
+        assert bool(jnp.all(p >= 0.0) & jnp.all(p <= pmax32)), (v, lam,
+                                                                pmax)
+
+        q_int, p_int, q_bnd, p_bnd, use_int = solve_candidates(g, z, cfg,
+                                                               ch)
+        f_int = _objective(q_int, p_int, g, z, cfg, ch)
+        f_bnd = _objective(q_bnd, p_bnd, g, z, cfg, ch)
+        kept = jnp.where(use_int, f_int, f_bnd)
+        disc = jnp.where(use_int, f_bnd, f_int)
+        assert bool(jnp.all(jnp.isfinite(kept)))
+        assert bool(jnp.all((kept <= disc) | ~jnp.isfinite(disc)))
 
 
 def test_queue_update_matches_eq9():
