@@ -128,6 +128,18 @@ def expected_uplink_time(gains: jax.Array, power: jax.Array, q: jax.Array,
 #     init(key, sigmas, cfg, **params)        -> state
 #     step(key, state, sigmas, cfg, **params) -> (gains, state)
 #
+# and each step factors as  step(key, ...) = apply(draw(key, n), ...)  where
+#
+#     draw(key, n, **params)                   -> raw   (the PRNG consumption)
+#     apply(raw, state, sigmas, cfg, **params) -> (gains, state)  (elementwise)
+#
+# The draw/apply split is what makes the client-sharded scheduling path
+# (repro.fl.client_shard) mesh-invariant: the full-(N,) draw runs OUTSIDE
+# the shard_map — the same traced program as the sequential engine, so the
+# bits per lane cannot depend on the device count — and each shard applies
+# the purely elementwise transform to its slice of the raw draws. ``step``
+# is literally the composition, so sequential trajectories are unchanged.
+#
 # The raw forms below take ``sigmas`` as an operand so the shard_map grid can
 # switch models per config with traced sigma tables; :func:`make_channel`
 # closes over (sigmas, cfg, params) and exposes the clean
@@ -157,16 +169,34 @@ def _rayleigh_init(key, sigmas, cfg):
     return channel_state_zero(sigmas.shape[0])
 
 
+def _rayleigh_draw(key, n):
+    return jax.random.uniform(key, (n,), dtype=jnp.float32,
+                              minval=1e-12, maxval=1.0)
+
+
+def _rayleigh_apply(raw, state, sigmas, cfg):
+    """The paper's model on pre-drawn uniforms (the body of
+    :func:`draw_gains`, elementwise in the client axis)."""
+    gains = -2.0 * sigmas * sigmas * jnp.log(raw)
+    lo, hi = cfg.gain_bounds()
+    return _pin(jnp.clip(gains, lo, hi)), state
+
+
 def _rayleigh_step(key, state, sigmas, cfg):
-    """The paper's model, bit-for-bit :func:`draw_gains` (state untouched)."""
-    return _pin(draw_gains(key, sigmas, cfg)), state
+    """Bit-for-bit :func:`draw_gains` (state untouched)."""
+    return _rayleigh_apply(_rayleigh_draw(key, sigmas.shape[0]), state,
+                           sigmas, cfg)
 
 
 def _rician_init(key, sigmas, cfg, k_factor=5.0):
     return channel_state_zero(sigmas.shape[0])
 
 
-def _rician_step(key, state, sigmas, cfg, k_factor=5.0):
+def _rician_draw(key, n, k_factor=5.0):
+    return _pin(jax.random.normal(key, (2, n), dtype=jnp.float32))
+
+
+def _rician_apply(xy, state, sigmas, cfg, k_factor=5.0):
     """Rician fading: LOS amplitude nu + CN scatter, E[|h|^2] = 2 sigma^2.
 
     nu^2 = 2 sigma^2 K/(K+1) (specular power), per-component scatter std
@@ -174,7 +204,6 @@ def _rician_step(key, state, sigmas, cfg, k_factor=5.0):
     x, y ~ N(0,1) — exactly the Exponential(2 sigma^2) Rayleigh gain.
     """
     k = jnp.float32(k_factor)
-    xy = _pin(jax.random.normal(key, (2,) + sigmas.shape, dtype=jnp.float32))
     nu = sigmas * jnp.sqrt(2.0 * k / (k + 1.0))
     s = sigmas / jnp.sqrt(k + 1.0)
     re = nu + s * xy[0]
@@ -182,23 +211,46 @@ def _rician_step(key, state, sigmas, cfg, k_factor=5.0):
     return _pin(_clip_gains(re * re + im * im, cfg)), state
 
 
+def _rician_step(key, state, sigmas, cfg, k_factor=5.0):
+    return _rician_apply(_rician_draw(key, sigmas.shape[0]), state, sigmas,
+                         cfg, k_factor)
+
+
 def _lognormal_init(key, sigmas, cfg, shadow_db=4.0):
     return channel_state_zero(sigmas.shape[0])
 
 
-def _lognormal_step(key, state, sigmas, cfg, shadow_db=4.0):
+def _lognormal_draw(key, n, shadow_db=4.0):
+    k_ray, k_sh = jax.random.split(key)
+    u = jax.random.uniform(k_ray, (n,), dtype=jnp.float32,
+                           minval=1e-12, maxval=1.0)
+    x = _pin(jax.random.normal(k_sh, (n,), dtype=jnp.float32))
+    return u, x
+
+
+def _lognormal_apply(raw, state, sigmas, cfg, shadow_db=4.0):
     """Rayleigh fast fading x log-normal shadowing (shadow_db dB std).
 
     The shadowing factor 10^(sigma_dB X / 10), X ~ N(0,1), is divided by its
     mean exp((sigma_dB ln10/10)^2 / 2) so E[|h|^2] stays 2 sigma^2 and the
     model changes only the gain *spread* relative to plain Rayleigh.
     """
-    k_ray, k_sh = jax.random.split(key)
-    fast = draw_gains(k_ray, sigmas, cfg)
+    u, x = raw
+    lo, hi = cfg.gain_bounds()
+    # the pin keeps the sigma-dependent fast-fading product out of the
+    # shadowing multiply's fusion region — XLA otherwise reassociates the
+    # chain differently when sigmas is a traced shard operand vs a
+    # closed-over constant (1 ulp/round, breaks the client-sharded mesh-1
+    # bitwise contract)
+    fast = _pin(jnp.clip(-2.0 * sigmas * sigmas * jnp.log(u), lo, hi))
     beta = float(shadow_db) * math.log(10.0) / 10.0
-    x = _pin(jax.random.normal(k_sh, sigmas.shape, dtype=jnp.float32))
     shadow = jnp.exp(beta * x - 0.5 * beta * beta)
     return _pin(_clip_gains(fast * shadow, cfg)), state
+
+
+def _lognormal_step(key, state, sigmas, cfg, shadow_db=4.0):
+    return _lognormal_apply(_lognormal_draw(key, sigmas.shape[0]), state,
+                            sigmas, cfg, shadow_db)
 
 
 def _gauss_markov_init(key, sigmas, cfg, rho=0.9):
@@ -207,7 +259,11 @@ def _gauss_markov_init(key, sigmas, cfg, rho=0.9):
     return _pin(sigmas[None, :] * xy)
 
 
-def _gauss_markov_step(key, state, sigmas, cfg, rho=0.9):
+def _gauss_markov_draw(key, n, rho=0.9):
+    return _pin(jax.random.normal(key, (2, n), dtype=jnp.float32))
+
+
+def _gauss_markov_apply(xy, state, sigmas, cfg, rho=0.9):
     """Complex AR(1) field: g(t) = rho g(t-1) + sqrt(1-rho^2) w(t).
 
     w ~ CN(0, 2 sigma^2) keeps the stationary gain distribution exactly
@@ -216,11 +272,15 @@ def _gauss_markov_step(key, state, sigmas, cfg, rho=0.9):
     model. rho = 0 is i.i.d. Rayleigh; rho -> 1 freezes the channel.
     """
     r = jnp.float32(rho)
-    xy = _pin(jax.random.normal(key, state.shape, dtype=jnp.float32))
     state, w = _pin((state, sigmas[None, :] * xy))
     new = _pin(r * state + jnp.sqrt(1.0 - r * r) * w)
     gains = _pin(_clip_gains(new[0] * new[0] + new[1] * new[1], cfg))
     return gains, new
+
+
+def _gauss_markov_step(key, state, sigmas, cfg, rho=0.9):
+    return _gauss_markov_apply(_gauss_markov_draw(key, state.shape[1]),
+                               state, sigmas, cfg, rho)
 
 
 CHANNEL_MODELS = {
@@ -228,6 +288,17 @@ CHANNEL_MODELS = {
     "rician": (_rician_init, _rician_step),
     "lognormal": (_lognormal_init, _lognormal_step),
     "gauss_markov": (_gauss_markov_init, _gauss_markov_step),
+}
+
+# name -> (draw, apply): the PRNG-consuming half and the elementwise half of
+# each step (step == apply(draw(key, n))). The client-sharded engine draws
+# full-shape raws outside its shard_map and applies per shard — see the
+# registry comment above.
+CHANNEL_RAW = {
+    "rayleigh": (_rayleigh_draw, _rayleigh_apply),
+    "rician": (_rician_draw, _rician_apply),
+    "lognormal": (_lognormal_draw, _lognormal_apply),
+    "gauss_markov": (_gauss_markov_draw, _gauss_markov_apply),
 }
 
 # Stable ids for lax.switch dispatch (grid runner); insertion order above.

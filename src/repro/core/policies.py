@@ -201,6 +201,43 @@ POLICIES = {
     "aoi_capped": (_make_aoi_capped, _aux0_zeros, True),
 }
 
+
+# --------------------------------------------------------------------------
+# PRNG draw plans: the randomness each policy step consumes, split out of the
+# step so the client-sharded engine (repro.fl.client_shard) can draw it
+# full-shape OUTSIDE its shard_map — the same traced draw as the sequential
+# step, so the bits per client lane cannot depend on the mesh size — and
+# hand each shard its slice. Each ``draw(key, n) -> raw`` consumes ``key``
+# exactly as the sequential step does (same splits, same call order), which
+# is what the mesh-1 bitwise parity contract rests on.
+# --------------------------------------------------------------------------
+
+def _draw_proposed(key, n):
+    # sample_selection draws uniform(key, q.shape) with the step key directly
+    return jax.random.uniform(key, (n,))
+
+
+def _draw_uniform(key, n):
+    # uniform_selection: k1 (ceil-branch Bernoulli), k2 (scores), k3 unused
+    k1, k2, k3 = jax.random.split(key, 3)
+    del k3
+    return {"take": jax.random.uniform(k1),
+            "scores": jax.random.uniform(k2, (n,))}
+
+
+def _draw_greedy(key, n):
+    return ()  # deterministic given the gains
+
+
+# Policies with a client-sharded implementation (see repro.fl.client_shard;
+# the others need global normalizations — sum of aux norms, global age
+# forcing — that have no exact sharded form yet).
+POLICY_DRAWS = {
+    "proposed": _draw_proposed,
+    "uniform": _draw_uniform,
+    "greedy_channel": _draw_greedy,
+}
+
 # Stable ids for lax.switch dispatch and sweep flags; insertion order above
 # (the first two match the engine's historical {proposed: 0, uniform: 1}).
 POLICY_IDS = {name: i for i, name in enumerate(POLICIES)}

@@ -152,6 +152,22 @@ def update_queues(state: SchedulerState, q: jax.Array, p: jax.Array,
                           t=state.t + 1)
 
 
+def selection_from_uniform(u: jax.Array, q: jax.Array,
+                           guarantee_one: bool = True) -> jax.Array:
+    """:func:`sample_selection` on pre-drawn uniforms: I_n = [u_n < q_n].
+
+    Split out so the client-sharded engine can draw ``u`` full-shape outside
+    its shard_map (mesh-invariant bits) and apply the comparison per shard;
+    ``sample_selection`` composes the two, bit-for-bit the historic draw.
+    """
+    sel = u < q
+    if guarantee_one:
+        none = ~jnp.any(sel)
+        forced = jnp.zeros_like(sel).at[jnp.argmax(q)].set(True)
+        sel = jnp.where(none, forced, sel)
+    return sel
+
+
 def sample_selection(key: jax.Array, q: jax.Array,
                      guarantee_one: bool = True) -> jax.Array:
     """Draw the participation indicators I_n ~ Bernoulli(q_n), independently.
@@ -159,12 +175,8 @@ def sample_selection(key: jax.Array, q: jax.Array,
     If nothing was drawn and ``guarantee_one``, the client with the largest q
     is selected (paper Section VI's fallback).
     """
-    sel = (jax.random.uniform(key, q.shape) < q)
-    if guarantee_one:
-        none = ~jnp.any(sel)
-        forced = jnp.zeros_like(sel).at[jnp.argmax(q)].set(True)
-        sel = jnp.where(none, forced, sel)
-    return sel
+    return selection_from_uniform(jax.random.uniform(key, q.shape), q,
+                                  guarantee_one)
 
 
 def schedule_step(key: jax.Array, gains: jax.Array, state: SchedulerState,
@@ -184,24 +196,40 @@ def schedule_step(key: jax.Array, gains: jax.Array, state: SchedulerState,
 # Baselines.
 # --------------------------------------------------------------------------
 
+def uniform_draw_m(take_hi: jax.Array, m_avg: float,
+                   n_clients: int) -> jax.Array:
+    """The uniform baseline's per-round subset size M' — floor(M) or
+    ceil(M) (``take_hi`` is the pre-drawn Bernoulli for the ceil branch),
+    **clipped into [1, N]**. The clip is the hardening for degenerate
+    matched-M values: M <= 0 used to reach the score sort as m = 0-or-1
+    only via a one-sided maximum, and M > N silently indexed the sort out
+    of range (undefined under jit) — both now saturate instead.
+    """
+    m_lo = jnp.floor(m_avg).astype(jnp.int32)
+    m = jnp.where(take_hi, m_lo + 1, m_lo)
+    return jnp.clip(m, 1, n_clients)
+
+
 def uniform_selection(key: jax.Array, n_clients: int, m_avg: float,
                       ch: ChannelConfig):
     """FedAvg's uniform policy, strengthened as in the paper's Section VI.
 
-    Selects floor(M) or ceil(M) clients uniformly at random (probability set so
-    the mean is M), and allocates P_n = Pbar * N / M' to satisfy the average
-    power constraint by design. Returns (selected, q, P).
+    Selects floor(M) or ceil(M) clients uniformly at random (probability set
+    so the mean is M, M clipped into [1, N] — see :func:`uniform_draw_m`),
+    and allocates P_n = Pbar * N / M' to satisfy the average power
+    constraint by design. Returns (selected, q, P). Score ties at the
+    selection threshold keep every tied client (selection is by value, so
+    the drawn subset can exceed M' only on exact f32 score collisions).
     """
     k1, k2, k3 = jax.random.split(key, 3)
-    m_lo = jnp.floor(m_avg).astype(jnp.int32)
     take_hi = jax.random.uniform(k1) < (m_avg - jnp.floor(m_avg))
-    m = jnp.where(take_hi, m_lo + 1, m_lo)
-    m = jnp.maximum(m, 1)
+    m = uniform_draw_m(take_hi, m_avg, n_clients)
     # Uniform subset of size m via random scores.
     scores = jax.random.uniform(k2, (n_clients,))
     thresh = -jnp.sort(-scores)[m - 1]
     sel = scores >= thresh
-    q = jnp.full((n_clients,), jnp.minimum(m_avg / n_clients, 1.0), jnp.float32)
+    q = jnp.full((n_clients,),
+                 jnp.clip(m_avg / n_clients, 0.0, 1.0), jnp.float32)
     p = jnp.full((n_clients,), ch.p_bar * n_clients / jnp.maximum(m, 1), jnp.float32)
     del k3
     return sel, q, p

@@ -2,6 +2,7 @@
 # eval_rounds, make_sweep_runner) stay importable from repro.fl.engine but
 # are not part of the package surface — the carry/chunk layout is free to
 # change without breaking the public API.
+from repro.fl.client_shard import make_schedule_runner
 from repro.fl.engine import (SimConfig, make_solve_fn, run_simulation_scan,
                              run_sweep)
 from repro.fl.grid import GridSpec, run_grid
@@ -13,7 +14,7 @@ from repro.fl.simulation import (match_uniform_m, run_simulation,
 
 __all__ = ["fl_round", "local_sgd", "make_fl_train_step", "make_train_step",
            "weighted_aggregate", "delta_aggregate",
-           "make_sharded_round_update",
+           "make_sharded_round_update", "make_schedule_runner",
            "SimConfig", "make_solve_fn",
            "GridSpec", "run_grid",
            "run_simulation", "run_simulation_loop", "run_simulation_scan",

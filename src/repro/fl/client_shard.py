@@ -1,0 +1,490 @@
+"""Client-axis sharded scheduling: the per-round N-client pipeline on a mesh.
+
+The paper's scheduler consumes only instantaneous CSI, so the aggregator
+re-solves Theorem 2 for EVERY client EVERY round — at the ROADMAP's
+millions-of-users scale that (N,)-shaped channel -> solve -> select ->
+account pipeline is the hot path, and until this module it materialized all
+N clients on one device (a full ``jnp.nonzero`` for participant packing, a
+full O(N log N) sort for the uniform baseline's threshold). Here the client
+axis is sharded over a ``'client'`` device mesh axis in ONE ``shard_map``:
+
+* each device steps its N/D slice of the fading process, runs its slice of
+  the Theorem-2 solve (the Pallas ``scheduler_solve`` blocks on TPU, the
+  jnp closed form elsewhere — per shard, via the ``solver`` switch), and
+  Bernoulli-samples its participants locally;
+* the global ``nonzero`` becomes a per-shard pack + cross-shard merge of
+  the <= m_cap packed participant indices;
+* the uniform baseline's full sort becomes a per-shard ``lax.top_k`` +
+  k-way merge of the (D * k) candidate scores;
+* only scalars (the fenced accounting island: t_comm, power, n_selected,
+  plus the queue-drift bookkeeping they imply) and the <= m_cap packed
+  indices cross devices, via ``psum`` / ``all_gather``.
+
+Numeric contract (tests/test_client_sharded.py), mirroring the grid's and
+the participant-sharded round's per-mesh contracts:
+
+* mesh size 1 is BITWISE-identical to ``run_simulation_scan`` — the raw
+  PRNG draws happen full-shape OUTSIDE the shard_map (the same traced draw
+  as the sequential engine: ``CHANNEL_RAW`` / ``POLICY_DRAWS`` split each
+  step into its PRNG half and its elementwise half), and every elementwise
+  stage is the same fenced code the sequential step runs.
+* the accounting island is EXACT on any mesh: its reductions always
+  associate as ``ACCOUNT_BLOCKS`` fixed blocks (``fl/sharding.py``), so the
+  sequential engine and every mesh width add the same partials in the same
+  order. Thresholds, argmaxes, packs, and merges are selections, not
+  arithmetic — exact by construction.
+* trained metrics (test_acc) drift only by reduction re-association in the
+  surrounding program, ~1 ulp/round, like the other sharded paths.
+
+Policies with a sharded implementation: ``proposed``, ``uniform``,
+``greedy_channel`` (``POLICY_DRAWS``). The others need global
+normalizations (update-norm sums, global age forcing) with no exact
+sharded form yet and are rejected up front.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import ChannelConfig, SchedulerConfig
+from repro.core.channel import CHANNEL_RAW, channel_rate, make_channel
+from repro.core.fences import pin
+from repro.core.policies import (POLICIES, POLICY_DRAWS, PolicyState,
+                                 init_policy_state, make_policy)
+from repro.core.scheduler import uniform_draw_m, update_queues_z
+from repro.fl.sharding import (ACCOUNT_BLOCKS, blocked_total,
+                               blocked_total_sharded, pad_client_axis,
+                               padded_len, shard_map)
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+# Pad fills for the client axis of each model's raw draws: uniforms feeding
+# log() pad with 1.0 (log 1 = 0, no -inf), normals with 0.0. Pad lanes are
+# masked out of every selection and reduction; the fills only need to keep
+# the elementwise math finite.
+_CHANNEL_RAW_PAD = {
+    "rayleigh": 1.0,
+    "rician": 0.0,
+    "lognormal": (1.0, 0.0),
+    "gauss_markov": 0.0,
+}
+
+# Policy raw fills: proposed pads its selection uniforms with 2.0 (never
+# < q <= 1), uniform pads its scores with -1.0 (below any real score in
+# [0, 1), so never at/above the threshold).
+_POLICY_RAW_PAD = {
+    "proposed": 2.0,
+    "uniform": {"take": 0.0, "scores": -1.0},
+    "greedy_channel": (),
+}
+
+
+def _pad_raw(raw, fills, n_pad: int):
+    """Pad every client-axis leaf of a raw-draw pytree (scalars pass)."""
+    return jax.tree.map(
+        lambda x, f: x if jnp.ndim(x) == 0
+        else pad_client_axis(x, n_pad, f), raw, fills)
+
+
+def _client_spec(x):
+    """PartitionSpec for a raw/state leaf: last axis is the client axis."""
+    nd = jnp.ndim(x)
+    if nd == 0:
+        return P()
+    return P(*([None] * (nd - 1) + ["client"]))
+
+
+def _axis_start(axis_name: str, n_local: int):
+    return jax.lax.axis_index(axis_name) * n_local
+
+
+def _global_argmax(score, local_ids, axis_name):
+    """``jnp.argmax`` of a sharded vector: first index attaining the max.
+
+    Selection only (max + index min), so exact on any mesh. ``score`` must
+    be -inf on invalid lanes.
+    """
+    lmax = jnp.max(score)
+    larg = local_ids[jnp.argmax(score)]
+    gmax = jax.lax.pmax(lmax, axis_name)
+    cand = jnp.where(lmax == gmax, larg, _I32_MAX)
+    return jax.lax.pmin(cand, axis_name)
+
+
+def _top_m_threshold(score, m, k_static: int, axis_name):
+    """The m-th largest entry of a sharded score vector.
+
+    Per-shard ``lax.top_k`` (k_static >= min(m, n_local) so the union of
+    per-shard candidates provably contains the global top-m), an
+    ``all_gather`` of the (D, k_static) candidates, and one small sort —
+    the distributed replacement for the sequential ``-sort(-scores)[m-1]``.
+    Returns the identical VALUE (selection, not arithmetic), so masks built
+    from it match the sequential ones bit for bit. ``m`` may be traced.
+    """
+    cand = jax.lax.top_k(score, k_static)[0]
+    merged = jax.lax.all_gather(cand, axis_name).reshape(-1)
+    ordered = -jnp.sort(-merged)
+    return ordered[m - 1]
+
+
+def _pack_participants_sharded(sel, q, m_cap: int, n_local: int, axis_name):
+    """Per-shard pack + cross-shard merge of the first m_cap participants.
+
+    The sequential engine packs with a full-(N,) ``jnp.nonzero``; here each
+    shard packs its own selections (ascending local order) and the merge
+    concatenates shards in mesh order — ascending GLOBAL order, so the
+    packed indices match the sequential ones exactly. Only the (D, m_cap)
+    packed indices/q values and the (D,) counts cross devices.
+    """
+    count = jnp.sum(sel).astype(jnp.int32)
+    lidx = jnp.nonzero(sel, size=m_cap, fill_value=0)[0]
+    gidx = (lidx + _axis_start(axis_name, n_local)).astype(jnp.int32)
+    all_idx = jax.lax.all_gather(gidx, axis_name).reshape(-1)
+    all_q = jax.lax.all_gather(q[lidx], axis_name).reshape(-1)
+    all_cnt = jax.lax.all_gather(count, axis_name)
+    slot_ok = (jnp.arange(m_cap)[None, :] < all_cnt[:, None]).reshape(-1)
+    take = jnp.nonzero(slot_ok, size=m_cap, fill_value=0)[0]
+    sel_valid = jnp.arange(m_cap) < jnp.sum(all_cnt)
+    sel_idx = jnp.where(sel_valid, all_idx[take], 0)
+    # q on dead slots never matters (their aggregation weight is exactly
+    # 0.0 in both engines); 1.0 keeps the division benign
+    q_sel = jnp.where(sel_valid, all_q[take], 1.0)
+    return sel_idx, sel_valid, q_sel
+
+
+# --------------------------------------------------------------------------
+# Sharded policy steps (the POLICY_DRAWS subset).
+# --------------------------------------------------------------------------
+
+def _sharded_proposed(scfg: SchedulerConfig, ch: ChannelConfig, m_avg,
+                      solve_fn, n_real: int, n_local: int, axis_name: str):
+    def step(raw, gains, z, aux, t, valid, local_ids):
+        q, p = solve_fn(gains, z)
+        sel = (raw < q) & valid
+        if scfg.guarantee_one:
+            none = jax.lax.psum(jnp.sum(sel), axis_name) == 0
+            score = jnp.where(valid, q, -jnp.inf)
+            forced_at = _global_argmax(score, local_ids, axis_name)
+            sel = jnp.where(none, local_ids == forced_at, sel)
+        z = update_queues_z(z, q, p, ch)
+        return sel, q, p, z, aux, t + 1
+
+    return step
+
+
+def _sharded_uniform(scfg: SchedulerConfig, ch: ChannelConfig, m_avg,
+                     solve_fn, n_real: int, n_local: int, axis_name: str):
+    m_hi = int(np.floor(m_avg)) + 1  # static bound: m' in [1, min(m_hi, N)]
+    k_static = max(1, min(n_local, min(m_hi, n_real)))
+
+    def step(raw, gains, z, aux, t, valid, local_ids):
+        take_hi = raw["take"] < (m_avg - jnp.floor(m_avg))
+        m = uniform_draw_m(take_hi, m_avg, n_real)
+        scores = jnp.where(valid, raw["scores"], -1.0)
+        thresh = _top_m_threshold(scores, m, k_static, axis_name)
+        sel = (raw["scores"] >= thresh) & valid
+        q = jnp.full((n_local,),
+                     jnp.clip(m_avg / n_real, 0.0, 1.0), jnp.float32)
+        p = jnp.full((n_local,),
+                     ch.p_bar * n_real / jnp.maximum(m, 1), jnp.float32)
+        return sel, q, p, z, aux, t + 1
+
+    return step
+
+
+def _sharded_greedy(scfg: SchedulerConfig, ch: ChannelConfig, m_avg,
+                    solve_fn, n_real: int, n_local: int, axis_name: str):
+    m = max(1, int(round(m_avg)))
+    k_static = max(1, min(n_local, min(m, n_real)))
+
+    def step(raw, gains, z, aux, t, valid, local_ids):
+        score = jnp.where(valid, gains, -jnp.inf)
+        thresh = _top_m_threshold(score, m, k_static, axis_name)
+        sel = (gains >= thresh) & valid
+        q = sel.astype(jnp.float32)
+        p = jnp.full((n_local,),
+                     ch.p_bar * n_real / jnp.maximum(m, 1), jnp.float32)
+        return sel, q, p, z, aux, t + 1
+
+    return step
+
+
+_SHARDED_POLICIES = {
+    "proposed": _sharded_proposed,
+    "uniform": _sharded_uniform,
+    "greedy_channel": _sharded_greedy,
+}
+
+
+# --------------------------------------------------------------------------
+# The sharded schedule: ONE shard_map over the client mesh axis.
+# --------------------------------------------------------------------------
+
+def validate_client_shards(n_shards: int, policy: str, channel: str,
+                           devices=None) -> list:
+    """Fail fast on unusable mesh/policy/channel combinations."""
+    devices = list(devices if devices is not None else jax.devices())
+    if not 1 <= n_shards <= len(devices):
+        raise ValueError(f"client_shards={n_shards} needs 1.."
+                         f"{len(devices)} of the available devices")
+    if ACCOUNT_BLOCKS % n_shards:
+        raise ValueError(
+            f"client_shards={n_shards} must divide ACCOUNT_BLOCKS="
+            f"{ACCOUNT_BLOCKS} (the fixed association width of the exact "
+            f"accounting reduce; see repro/fl/sharding.py)")
+    if policy not in _SHARDED_POLICIES:
+        raise ValueError(
+            f"policy {policy!r} has no client-sharded implementation "
+            f"(sharded: {sorted(_SHARDED_POLICIES)}); it needs a global "
+            "normalization with no exact sharded form")
+    if channel not in CHANNEL_RAW:
+        raise ValueError(f"unknown channel model {channel!r} "
+                         f"(registered: {sorted(CHANNEL_RAW)})")
+    return devices[:n_shards]
+
+
+def _validate_m_avg(policy: str, m_avg: float):
+    # mirror make_policy's check: a baseline with m_avg = 0 would silently
+    # run with q = 0 (and a 1/q aggregation blowup downstream)
+    if POLICIES[policy][2] and not m_avg > 0.0:
+        raise ValueError(f"policy {policy!r} needs m_avg > 0 (matched "
+                         f"average participation), got {m_avg!r}")
+
+
+def make_sharded_schedule(sim_policy: str, sim_channel: str,
+                          channel_params: tuple, scfg: SchedulerConfig,
+                          ch: ChannelConfig, sigmas: jax.Array, *,
+                          n_shards: int, m_cap: int, m_avg: float = 0.0,
+                          solve_fn=None, devices=None):
+    """Build the one-``shard_map`` scheduling step for one round.
+
+    Returns ``schedule(raw_ch, raw_pol, pol_state, ch_state) -> (t_comm,
+    power, n_sel, sel_idx, sel_valid, q_sel, pol_state', ch_state')`` where
+    the raws are the FULL-SHAPE (N,) PRNG draws of ``draw_channel_raw`` /
+    ``draw_policy_raw`` (drawn outside, so their bits are mesh-invariant)
+    and the states carry the sequential engines' unpadded (N,) layout —
+    padding to whole accounting blocks happens inside, per call.
+    """
+    n = int(sigmas.shape[0])
+    devices = validate_client_shards(n_shards, sim_policy, sim_channel,
+                                     devices)
+    _validate_m_avg(sim_policy, m_avg)
+    mesh = Mesh(np.array(devices), ("client",))
+    n_pad = padded_len(n)
+    n_local = n_pad // n_shards
+    ckw = dict(channel_params)
+    _, chan_apply = CHANNEL_RAW[sim_channel]
+    policy_step = _SHARDED_POLICIES[sim_policy](
+        scfg, ch, m_avg, solve_fn, n, n_local, "client")
+    sig_pad = pad_client_axis(sigmas, n_pad, 0.0)
+
+    def shard_body(raw_ch, raw_pol, z, aux, t, cst, sig):
+        local_ids = (_axis_start("client", n_local)
+                     + jnp.arange(n_local, dtype=jnp.int32))
+        valid = local_ids < n
+        raw_ch, cst, sig = pin((raw_ch, cst, sig))
+        gains, cst = chan_apply(raw_ch, cst, sig, ch, **ckw)
+        # same fence discipline as the sequential round core: the step
+        # outputs are pinned so downstream chains cannot fuse into them
+        gains, cst = jax.lax.optimization_barrier((gains, cst))
+        raw_pol, z, aux = pin((raw_pol, z, aux))
+        sel, q, p, z, aux, t = jax.lax.optimization_barrier(
+            policy_step(raw_pol, gains, z, aux, t, valid, local_ids))
+        rate = channel_rate(gains, p, ch)
+        t_comm = blocked_total_sharded(
+            jnp.where(sel, scfg.model_bits / jnp.maximum(rate, 1e-9), 0.0),
+            "client", n_shards)
+        power = blocked_total_sharded(
+            jnp.where(valid, p * q, 0.0), "client", n_shards)
+        t_comm, power = jax.lax.optimization_barrier((t_comm, power))
+        n_sel = jax.lax.psum(jnp.sum(sel), "client")
+        sel_idx, sel_valid, q_sel = _pack_participants_sharded(
+            sel, q, m_cap, n_local, "client")
+        return (t_comm, power, n_sel, sel_idx, sel_valid, q_sel, z, aux, t,
+                cst)
+
+    dummy_key = jax.random.PRNGKey(0)
+    raw_ch_eg = jax.eval_shape(
+        lambda k: draw_channel_raw(sim_channel, k, n, ckw), dummy_key)
+    raw_pol_eg = jax.eval_shape(
+        lambda k: draw_policy_raw(sim_policy, k, n), dummy_key)
+    in_specs = (
+        jax.tree.map(_client_spec, raw_ch_eg),
+        jax.tree.map(_client_spec, raw_pol_eg),
+        P("client"), P("client"), P(), P(None, "client"), P("client"))
+    out_specs = (P(), P(), P(), P(), P(), P(), P("client"), P("client"),
+                 P(), P(None, "client"))
+    sharded = shard_map(shard_body, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs)
+
+    def constrain(raw):
+        # the raws are drawn full-shape OUTSIDE the shard_map (mesh-
+        # invariant bits); without a placement hint GSPMD materializes the
+        # whole (N,) draw on every device. The constraint shards the draw
+        # output across the client mesh — purely a placement choice, the
+        # values are untouched (verified bit-exact), worth ~15% at N=10^6.
+        return jax.tree.map(
+            lambda x: x if jnp.ndim(x) == 0
+            else jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, _client_spec(x))), raw)
+
+    def schedule(raw_ch, raw_pol, pol_state: PolicyState, ch_state):
+        raw_ch = _pad_raw(constrain(raw_ch), _CHANNEL_RAW_PAD[sim_channel],
+                          n_pad)
+        raw_pol = _pad_raw(constrain(raw_pol),
+                           _POLICY_RAW_PAD[sim_policy], n_pad)
+        z = pad_client_axis(pol_state.z, n_pad, 0.0)
+        aux = pad_client_axis(pol_state.aux, n_pad, 0.0)
+        cst = pad_client_axis(ch_state, n_pad, 0.0)
+        (t_comm, power, n_sel, sel_idx, sel_valid, q_sel, z, aux, t,
+         cst) = sharded(raw_ch, raw_pol, z, aux, pol_state.t, cst, sig_pad)
+        return (t_comm, power, n_sel, sel_idx, sel_valid, q_sel,
+                PolicyState(z[:n], aux[:n], t), cst[..., :n])
+
+    return schedule
+
+
+def draw_channel_raw(channel: str, key, n: int, channel_params):
+    draw, _ = CHANNEL_RAW[channel]
+    return draw(key, n, **dict(channel_params))
+
+
+def draw_policy_raw(policy: str, key, n: int):
+    return POLICY_DRAWS[policy](key, n)
+
+
+# --------------------------------------------------------------------------
+# Scheduling-only trajectory runner: the massive-N bench/demo driver.
+# --------------------------------------------------------------------------
+
+def make_schedule_runner(sigmas: jax.Array, scfg: SchedulerConfig,
+                         ch: ChannelConfig, *, rounds: int,
+                         policy: str = "proposed", m_avg: float = 0.0,
+                         channel: str = "rayleigh",
+                         channel_params: tuple = (), solver: str = "jnp",
+                         client_shards: int = 0, m_cap: int = 32,
+                         solve_fn=None, devices=None):
+    """Jitted scheduling-layer trajectory (no model training, no dataset).
+
+    ``runner(key) -> (t_comm, power, n_sel)``, each (rounds,): per-round
+    TDMA communication time, sum P q, and participation count — the
+    massive-N hot path alone, which is what ``bench_massive`` times and
+    ``examples/massive_n.py`` demonstrates at N = 10^5..10^6.
+
+    ``client_shards=0`` is the sequential reference: the SAME per-round key
+    chain and the same blocked accounting reduce, driven through the
+    registry channel/policy steps on one device — so sharded and sequential
+    trajectories are comparable exactly (the accounting island must agree
+    bit for bit; tests/test_client_sharded.py's massive leg checks this at
+    N = 10^5).
+    """
+    from repro.fl.engine import make_solve_fn
+
+    n = int(sigmas.shape[0])
+    solve = solve_fn or make_solve_fn(scfg, ch, solver)
+    chan = make_channel(channel, sigmas, ch, **dict(channel_params))
+    if client_shards:
+        schedule = make_sharded_schedule(
+            policy, channel, channel_params, scfg, ch, sigmas,
+            n_shards=client_shards, m_cap=m_cap, m_avg=m_avg,
+            solve_fn=solve, devices=devices)
+
+        def round_fn(pol_state, ch_state, k):
+            k_ch, k_sel, _ = jax.random.split(k, 3)
+            raw_ch = draw_channel_raw(channel, k_ch, n,
+                                      dict(channel_params))
+            raw_pol = draw_policy_raw(policy, k_sel, n)
+            (t_comm, power, n_sel, _, _, _, pol_state,
+             ch_state) = schedule(raw_ch, raw_pol, pol_state, ch_state)
+            return pol_state, ch_state, t_comm, power, n_sel
+    else:
+        step = make_policy(policy, scfg, ch, m_avg=m_avg, solve_fn=solve)
+
+        def round_fn(pol_state, ch_state, k):
+            k_ch, k_sel, _ = jax.random.split(k, 3)
+            gains, ch_state = chan.step(k_ch, ch_state)
+            gains, ch_state = jax.lax.optimization_barrier(
+                (gains, ch_state))
+            sel, q, p, pol_state = jax.lax.optimization_barrier(
+                step(k_sel, gains, pol_state))
+            rate = channel_rate(gains, p, ch)
+            t_comm, power = jax.lax.optimization_barrier(
+                (blocked_total(jnp.where(
+                    sel, scfg.model_bits / jnp.maximum(rate, 1e-9), 0.0)),
+                 blocked_total(p * q)))
+            return pol_state, ch_state, t_comm, power, jnp.sum(sel)
+
+    from repro.fl.engine import CHANNEL_INIT_TAG
+
+    @jax.jit
+    def runner(key):
+        cst0 = chan.init(jax.random.fold_in(key, CHANNEL_INIT_TAG))
+        pst0 = init_policy_state(policy, n)
+
+        def body(carry, _):
+            pst, cst, k = carry
+            k, kr = jax.random.split(k)
+            pst, cst, t_comm, power, n_sel = round_fn(pst, cst, kr)
+            return (pst, cst, k), (t_comm, power, n_sel)
+
+        _, out = jax.lax.scan(body, (pst0, cst0, key), None, length=rounds)
+        return out
+
+    return runner
+
+
+# --------------------------------------------------------------------------
+# The full client-sharded simulation round (drop-in for make_sim_round).
+# --------------------------------------------------------------------------
+
+def make_client_sharded_round(ds, sim, scfg: SchedulerConfig,
+                              ch: ChannelConfig, sigmas: jax.Array,
+                              solve_fn=None):
+    """The client-sharded ``sim_round`` for the scan engine.
+
+    Same signature and carry layout as ``make_sim_round``'s product —
+    ``sim_round(params, pol_state, ch_state, key) -> (params, pol_state,
+    ch_state, t_comm, power, n_sel)`` — so ``run_config_chunks`` and the
+    whole history machinery drive it unchanged. Scheduling runs on the
+    ``'client'`` mesh; the <= m_cap merged participants then train exactly
+    as the sequential engine trains them (same packed indices, same batch
+    draws, same masked aggregate).
+    """
+    from repro.fl.engine import make_solve_fn, resolve_wire_dtype
+    from repro.fl.round import local_sgd, masked_aggregate, sample_batches
+    from repro.models.registry import make_model
+
+    if sim.participant_shards:
+        raise ValueError(
+            "client_shards and participant_shards each own the device "
+            "mesh; nesting them is not supported — pick one")
+    n = ds.n_clients
+    spec = make_model(sim.model, ds, **dict(sim.model_params))
+    wire = resolve_wire_dtype(sim.wire_dtype)
+    solve = solve_fn or make_solve_fn(scfg, ch, sim.solver)
+    schedule = make_sharded_schedule(
+        sim.policy, sim.channel, sim.channel_params, scfg, ch, sigmas,
+        n_shards=sim.client_shards, m_cap=sim.m_cap, m_avg=sim.uniform_m,
+        solve_fn=solve)
+
+    def sim_round(params, pol_state, ch_state, key):
+        k_ch, k_sel, k_bat = jax.random.split(key, 3)
+        raw_ch = draw_channel_raw(sim.channel, k_ch, n, sim.channel_params)
+        raw_pol = draw_policy_raw(sim.policy, k_sel, n)
+        (t_comm, power, n_sel, sel_idx, sel_valid, q_sel, pol_state,
+         ch_state) = schedule(raw_ch, raw_pol, pol_state, ch_state)
+        imgs, labs = sample_batches(k_bat, ds.client_images,
+                                    ds.client_labels, sel_idx, sim.m_cap,
+                                    sim.local_steps, sim.batch)
+        updated = jax.lax.map(
+            lambda b: local_sgd(spec.loss_fn, params, b, sim.gamma,
+                                sim.local_steps), (imgs, labs))
+        new_params = masked_aggregate(params, updated, sel_valid, q_sel, n,
+                                      sim.aggregation, wire)
+        return new_params, pol_state, ch_state, t_comm, power, n_sel
+
+    return sim_round

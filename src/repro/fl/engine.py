@@ -58,7 +58,9 @@ from repro.core import (ChannelConfig, SchedulerConfig, channel_rate,
 from repro.core.policies import POLICY_IDS  # noqa: F401  (re-exported)
 from repro.data.synthetic import FederatedDataset
 from repro.fl.round import (local_sgd, make_sharded_round_update,
-                            masked_aggregate)
+                            masked_aggregate, pack_participants,
+                            sample_batches)
+from repro.fl.sharding import blocked_total
 from repro.models.registry import make_model
 
 # fold_in tag consumed by stateful channel inits (keeps the round-key chain
@@ -90,6 +92,10 @@ class SimConfig:
     model_params: tuple = ()     # ((name, value), ...) model extras
     participant_shards: int = 0  # 0: sequential lax.map; D>=1: shard_map
                                  # the participant axis over D devices
+    client_shards: int = 0       # 0: one-device (N,) scheduling; D>=1:
+                                 # shard the CLIENT axis (channel step +
+                                 # Theorem-2 solve + selection + queues)
+                                 # over D devices (fl/client_shard.py)
     wire_dtype: str = "float32"  # delta-aggregation wire ("float32"|"bfloat16")
 
 
@@ -98,12 +104,16 @@ class SimConfig:
 # --------------------------------------------------------------------------
 
 def make_solve_fn(scfg: SchedulerConfig, ch: ChannelConfig,
-                  solver: str = "jnp", interpret: Optional[bool] = None
+                  solver: str = "jnp", interpret: Optional[bool] = None,
+                  block: Optional[int] = None
                   ) -> Callable[[jax.Array, jax.Array], tuple]:
     """Return ``solve(gains, z) -> (q, P)`` for the configured backend.
 
     ``solver="pallas"`` runs the tiled kernel compiled on TPU and in
-    interpret mode elsewhere (override with ``interpret``).
+    interpret mode elsewhere (override with ``interpret``). The returned
+    closure accepts any 1-D client slice, so the client-sharded engine can
+    call it per shard; ``block`` overrides the kernel's tile length (e.g.
+    to keep shard-local interpret-mode runs small).
     """
     if solver == "jnp":
         from repro.core import solve_round
@@ -114,11 +124,12 @@ def make_solve_fn(scfg: SchedulerConfig, ch: ChannelConfig,
 
     def solve(gains, z):
         # interpret=None lets scheduler_solve auto-select (compiled on TPU)
+        kw = {} if block is None else {"block": block}
         return scheduler_solve(
             gains, z, n=scfg.n_clients, v=scfg.V, lam=scfg.lam,
             ell=scfg.model_bits, bandwidth=ch.bandwidth_hz,
             noise=ch.noise_power, p_max=ch.p_max, p_bar=ch.p_bar,
-            q_floor=scfg.q_floor, interpret=interpret)
+            q_floor=scfg.q_floor, interpret=interpret, **kw)
 
     return solve
 
@@ -162,6 +173,11 @@ def make_round_core(ds: FederatedDataset, sim: SimConfig,
     m_cap = sim.m_cap
     spec = make_model(sim.model, ds, **dict(sim.model_params))
     wire = resolve_wire_dtype(sim.wire_dtype)
+    if sim.client_shards:
+        raise ValueError(
+            "make_round_core builds the single-device-client round; "
+            "client_shards needs fl/client_shard.py's round (make_sim_round "
+            "dispatches)")
     sharded_update = None
     if sim.participant_shards:
         sharded_update = make_sharded_round_update(
@@ -185,21 +201,20 @@ def make_round_core(ds: FederatedDataset, sim: SimConfig,
         # sum_n E[P_n q_n] this round. The accounting island is fenced on
         # both sides for the same reason as the step outputs above (its
         # log2 chain otherwise fuses with whatever the surrounding program
-        # offers, e.g. differently per per-device config count).
+        # offers, e.g. differently per per-device config count). The sums
+        # run through the fixed-block mesh-invariant reduce so the
+        # client-sharded engine reproduces them bit for bit on any mesh.
         rate = channel_rate(gains, p, rate_cfg)
         t_comm, power = jax.lax.optimization_barrier(
-            (jnp.sum(jnp.where(sel, scfg.model_bits
-                               / jnp.maximum(rate, 1e-9), 0.0)),
-             jnp.sum(p * q)))
+            (blocked_total(jnp.where(sel, scfg.model_bits
+                                     / jnp.maximum(rate, 1e-9), 0.0)),
+             blocked_total(p * q)))
         # pick up to m_cap participants (nonzero packs left)
-        sel_idx = jnp.nonzero(sel, size=m_cap, fill_value=0)[0]
-        sel_valid = jnp.arange(m_cap) < jnp.sum(sel)
+        sel_idx, sel_valid = pack_participants(sel, m_cap)
         q_sel = q[sel_idx]
-        per_client = ds.client_labels.shape[1]
-        idx = jax.random.randint(
-            k_bat, (m_cap, sim.local_steps, sim.batch), 0, per_client)
-        imgs = ds.client_images[sel_idx[:, None, None], idx]
-        labs = ds.client_labels[sel_idx[:, None, None], idx]
+        imgs, labs = sample_batches(k_bat, ds.client_images,
+                                    ds.client_labels, sel_idx, m_cap,
+                                    sim.local_steps, sim.batch)
         if sharded_update is not None:
             new_params = sharded_update(params, imgs, labs, sel_valid,
                                         q_sel)
@@ -225,8 +240,15 @@ def make_sim_round(ds: FederatedDataset, sim: SimConfig,
     Returns ``sim_round(params, pol_state, ch_state, key)``— pure,
     scan-able. The channel comes from ``sim.channel`` / ``sim.channel_params``
     and the policy from ``sim.policy`` (matched M = ``sim.uniform_m``), both
-    resolved through the registries.
+    resolved through the registries. ``sim.client_shards >= 1`` routes the
+    whole scheduling pipeline through the client-sharded ``shard_map`` path
+    (``fl/client_shard.py``) — bitwise-identical at mesh size 1, exact
+    accounting island on any mesh (tests/test_client_sharded.py).
     """
+    if sim.client_shards:
+        from repro.fl.client_shard import make_client_sharded_round
+        return make_client_sharded_round(ds, sim, scfg, ch, sigmas,
+                                         solve_fn)
     solve = solve_fn or make_solve_fn(scfg, ch, sim.solver)
     channel = make_channel(sim.channel, sigmas, ch,
                            **dict(sim.channel_params))

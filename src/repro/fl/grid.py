@@ -146,12 +146,12 @@ def make_grid_runner(ds: FederatedDataset, sim: SimConfig,
     unless you need to warm/reuse the compiled runner (benchmarks do).
     """
     spec.validate()
-    if sim.participant_shards:
+    if sim.participant_shards or sim.client_shards:
         raise ValueError(
             "the grid shards the CONFIG axis across the mesh; nesting the "
-            "participant-sharded round inside it is not supported — use "
-            "sim.participant_shards with run_simulation, or the grid with "
-            "participant_shards=0")
+            "participant- or client-sharded round inside it is not "
+            "supported — use sim.participant_shards / sim.client_shards "
+            "with run_simulation, or the grid with both at 0")
     n = scfg.n_clients
     devices = list(devices if devices is not None else jax.devices())
     mesh = Mesh(np.array(devices), ("grid",))

@@ -115,6 +115,35 @@ def fl_round(loss_fn: Callable, params, client_batches, selected, q,
     return weighted_aggregate(params, updated, selected, q)
 
 
+def pack_participants(sel, m_cap: int):
+    """Pack the first ``m_cap`` selected clients to the front.
+
+    ``sel`` is the (N,) selection mask; returns ``(sel_idx, sel_valid)`` —
+    the packed (ascending) client indices, zero-filled past the selection
+    count, and the validity mask. The single-device home of the packing the
+    client-sharded engine reproduces with a per-shard pack + cross-shard
+    merge (``fl/client_shard.py::_pack_participants_sharded``).
+    """
+    sel_idx = jnp.nonzero(sel, size=m_cap, fill_value=0)[0]
+    sel_valid = jnp.arange(m_cap) < jnp.sum(sel)
+    return sel_idx, sel_valid
+
+
+def sample_batches(key, client_images, client_labels, sel_idx, m_cap: int,
+                   steps: int, batch: int):
+    """Draw the participants' local minibatches (one per local SGD step).
+
+    Shared verbatim by the sequential round core and the client-sharded
+    round — the (m_cap, steps, batch) index draw consumes the SAME key the
+    same way in both, which the mesh-1 bitwise parity contract relies on.
+    """
+    per_client = client_labels.shape[1]
+    idx = jax.random.randint(key, (m_cap, steps, batch), 0, per_client)
+    imgs = client_images[sel_idx[:, None, None], idx]
+    labs = client_labels[sel_idx[:, None, None], idx]
+    return imgs, labs
+
+
 def masked_aggregate(params, updated, sel_valid, q_sel, n_clients,
                      aggregation: str = "paper", wire_dtype=jnp.float32,
                      axis_name=None):

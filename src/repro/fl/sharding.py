@@ -1,19 +1,48 @@
-"""shard_map compatibility shim shared by the grid and the sharded round.
+"""Client/participant mesh utilities shared by the sharded engines.
 
-jax >= 0.5 promotes ``shard_map`` out of experimental and renames the
-replication-check flag (``check_rep`` -> ``check_vma``). Both callers need
-the check OFF: their bodies close over unpartitioned constants (dataset
-arrays, configs) that the checker cannot prove replicated.
+Two layers live here:
+
+* the ``shard_map`` compatibility shim (jax >= 0.5 promotes ``shard_map``
+  out of experimental and renames the replication-check flag
+  ``check_rep`` -> ``check_vma``; every caller needs the check OFF because
+  the bodies close over unpartitioned constants).
+* the **mesh-invariant blocked reduction** behind the client-sharded
+  scheduling path's exact accounting contract: a float32 sum over the
+  (N,) client axis whose bits do not depend on how many devices the axis
+  is sharded over. The sum is always associated as ``ACCOUNT_BLOCKS``
+  fixed contiguous blocks — block partials first, then one fixed-order
+  reduce over the (ACCOUNT_BLOCKS,) partial vector — and every stage is
+  fenced with ``optimization_barrier`` so XLA compiles the identical
+  reduction graph in every surrounding program. A D-device shard of the
+  client axis owns ``ACCOUNT_BLOCKS / D`` whole blocks, computes their
+  partials locally, and an ``all_gather`` reassembles the (ACCOUNT_BLOCKS,)
+  vector in global block order — so the sequential engine (D absent), the
+  mesh-1 shard, and any wider mesh all add the same numbers in the same
+  order (tests/test_client_sharded.py asserts bit equality).
 """
 
 from __future__ import annotations
 
 import inspect
 
+import jax
+import jax.numpy as jnp
+
+from repro.core.fences import pin
+
 try:  # jax >= 0.5 promotes shard_map out of experimental
     from jax import shard_map as _shard_map
 except ImportError:
     from jax.experimental.shard_map import shard_map as _shard_map
+
+# Fixed association width of the accounting reduce. Constant across mesh
+# sizes BY DESIGN (cross-mesh bit-equality needs every mesh to add the same
+# block partials); 96 is divisible by 1/2/3/4/6/8/12/16/24/32/48/96, so the
+# CI 8-virtual-device mesh AND the power-of-two TPU slices (16, 32) the
+# Pallas path targets all divide it. Changing this constant changes every
+# engine trajectory by ~1 ulp — it is part of the numeric contract, not a
+# tuning knob.
+ACCOUNT_BLOCKS = 96
 
 
 def shard_map(f, *, mesh, in_specs, out_specs):
@@ -23,3 +52,84 @@ def shard_map(f, *, mesh, in_specs, out_specs):
           else {"check_vma": False} if "check_vma" in flags else {})
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       **kw)
+
+
+def padded_len(n: int, n_blocks: int = ACCOUNT_BLOCKS) -> int:
+    """The client-axis length after padding to whole accounting blocks."""
+    return n + (-n) % n_blocks
+
+
+def block_partials(contrib: jax.Array, n_blocks: int) -> jax.Array:
+    """Per-block partial sums of a (n_blocks * L,) contribution vector.
+
+    The pins on both sides are load-bearing: they keep the row reduction an
+    isolated XLA island, so a (96, L) sequential reshape and a (12, L)
+    per-shard reshape of the same lanes reduce with identical association
+    (verified bit-for-bit by the client-sharded parity suite).
+    """
+    return pin(jnp.sum(pin(contrib).reshape(n_blocks, -1), axis=1))
+
+
+def _fold_partials(partials: jax.Array, n_blocks: int) -> jax.Array:
+    """Left-fold the (n_blocks,) partials with an explicit add chain.
+
+    A ``jnp.sum`` here would leave the association to the reduce lowering,
+    which XLA picks per surrounding program (observed: the same 24-element
+    reduce compiles to different f32 bits inside vs outside a shard_map).
+    An unrolled chain of scalar adds has no such freedom — XLA does not
+    reassociate explicit float adds — so the fold is identical in every
+    context by construction. n_blocks is small and fixed; the unroll is
+    under a hundred scalar adds.
+    """
+    partials = pin(partials)
+    total = partials[0]
+    for i in range(1, n_blocks):
+        total = total + partials[i]
+    return pin(total)
+
+
+def blocked_total(contrib: jax.Array,
+                  n_blocks: int = ACCOUNT_BLOCKS) -> jax.Array:
+    """Mesh-invariant f32 total of per-client contributions (N,) -> ().
+
+    Pads with exact zeros to whole blocks (+0.0 terms cannot change any
+    partial), then reduces block partials in fixed order. This is THE
+    accounting reduction of every engine: the scan/grid round core calls it
+    directly, and :func:`blocked_total_sharded` computes the identical
+    association from per-shard slices.
+    """
+    n = contrib.shape[0]
+    pad = (-n) % n_blocks
+    if pad:
+        contrib = jnp.concatenate(
+            [contrib, jnp.zeros((pad,), contrib.dtype)])
+    return _fold_partials(block_partials(contrib, n_blocks), n_blocks)
+
+
+def blocked_total_sharded(contrib_local: jax.Array, axis_name: str,
+                          n_shards: int,
+                          n_blocks: int = ACCOUNT_BLOCKS) -> jax.Array:
+    """:func:`blocked_total` from inside a client-sharded ``shard_map`` body.
+
+    ``contrib_local`` is this shard's (n_padded / n_shards,) slice — already
+    padded, so each shard owns ``n_blocks / n_shards`` whole blocks. The
+    only bytes that cross devices are the (n_blocks,) block partials.
+    """
+    part = block_partials(contrib_local, n_blocks // n_shards)
+    full = jax.lax.all_gather(part, axis_name).reshape(n_blocks)
+    return _fold_partials(full, n_blocks)
+
+
+def pad_client_axis(x: jax.Array, n_pad: int, fill, axis: int = -1):
+    """Pad the client axis of ``x`` up to ``n_pad`` lanes with ``fill``.
+
+    The client-sharded round pads every (N,)-shaped operand on entry (and
+    slices the state back to (N,) on exit) so the carry layout stays
+    identical to the sequential engine's.
+    """
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    if n == n_pad:
+        return x
+    shape = x.shape[:axis] + (n_pad - n,) + x.shape[axis + 1:]
+    return jnp.concatenate([x, jnp.full(shape, fill, x.dtype)], axis=axis)

@@ -101,10 +101,10 @@ def run_simulation(key, params, ds: FederatedDataset, sim: SimConfig,
             "the legacy loop engine only knows the paper's setup "
             "(channel='rayleigh', policy in {'proposed', 'uniform'}); use "
             "engine='scan' for registry channels/policies")
-    if sim.participant_shards:
+    if sim.participant_shards or sim.client_shards:
         raise ValueError(
             "the legacy loop engine is the sequential parity reference; "
-            "participant sharding needs engine='scan'")
+            "participant/client sharding needs engine='scan'")
     return run_simulation_loop(key, params, ds, sim, scfg, ch, sigmas)
 
 

@@ -99,11 +99,25 @@ def scheduler_solve(gains: jax.Array, z: jax.Array, *, n: int, v: float,
     (8, 128)-tiled VPU pass. ``interpret=None`` auto-selects: compiled on a
     TPU backend, interpret mode everywhere else — this is what lets the
     simulation engine's ``solver="pallas"`` config run unchanged on CPU.
+
+    Padded-lane hygiene: pad lanes carry gains = 1.0 with Z = 0, which the
+    solve maps to finite boundary values (Z = 0 floors to _EPS, the huge
+    Lambert-W argument saturates to the P = Pmax branch) — no NaN/inf is
+    ever produced that could leak into real lanes through a compiler
+    re-association, and the pad is sliced off before returning
+    (tests/test_scheduler_solve_pallas.py pins this at every edge size).
+    ``block`` may be overridden (e.g. shard-local client slices keep
+    interpret-mode CI affordable); on TPU keep it a multiple of the
+    8 x 128 = 1024 VPU tile or the compiler will pad each grid step.
     """
+    if block <= 0:
+        raise ValueError(f"block must be positive, got {block}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     assert gains.shape == z.shape and gains.ndim == 1
     n_real = gains.shape[0]
+    if n_real == 0:
+        raise ValueError("scheduler_solve needs at least one client")
     pad = (-n_real) % block
     gains_p = jnp.pad(gains.astype(jnp.float32), (0, pad), constant_values=1.0)
     z_p = jnp.pad(z.astype(jnp.float32), (0, pad))

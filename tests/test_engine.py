@@ -10,8 +10,8 @@ import pytest
 
 from repro.core import ChannelConfig, SchedulerConfig, heterogeneous_sigmas
 from repro.data.synthetic import make_cifar10_like, make_lm_federated
-from repro.fl.engine import (SimConfig, make_solve_fn, run_simulation_scan,
-                             run_sweep)
+from repro.fl.engine import (SimConfig, eval_rounds, history_from_trajectory,
+                             make_solve_fn, run_simulation_scan, run_sweep)
 from repro.fl.simulation import run_simulation, run_simulation_loop
 from repro.models.cnn import CNNConfig, init_cnn
 from repro.models.registry import make_model
@@ -94,6 +94,59 @@ def test_scan_matches_loop_all_models_and_delta(small_setup, model,
     for k in ("comm_time", "test_acc", "avg_power"):
         np.testing.assert_allclose(h_loop[k], h_scan[k], rtol=5e-4,
                                    atol=1e-5, err_msg=f"{model}/{k}")
+
+
+@pytest.mark.parametrize("rounds,eval_every", [
+    (4, 10),    # eval_every > rounds: round 0 + final round only
+    (13, 5),    # eval stride does not divide rounds: tail chunk
+    (1, 3),     # single round: the round-0 eval IS the final eval
+    (7, 7),     # stride == rounds: no full chunk, tail of rounds-1
+    (10, 5),    # final round lands exactly on the stride: no tail chunk
+])
+def test_eval_bookkeeping_awkward_shapes(small_setup, rounds, eval_every):
+    """eval_rounds / the chunk schedule / the legacy loop must agree on
+    WHICH rounds get recorded for every awkward (rounds, eval_every)
+    combination — the chunk math ((rounds-1)//eval_every full chunks plus
+    a tail) silently disagreeing with the loop's modulo rule would skew
+    every downstream trajectory comparison."""
+    ds, params, ch, scfg = small_setup
+    sig = heterogeneous_sigmas(N)
+    sim = _sim(rounds=rounds, eval_every=eval_every, local_steps=1, m_cap=3)
+    ev = eval_rounds(rounds, eval_every)
+    assert ev[0] == 0 and ev[-1] == rounds - 1
+    assert len(set(ev)) == len(ev)
+    h_loop = run_simulation_loop(jax.random.PRNGKey(11), params, ds, sim,
+                                 scfg, ch, sig)
+    h_scan = run_simulation_scan(jax.random.PRNGKey(11), params, ds, sim,
+                                 scfg, ch, sig)
+    assert h_loop["round"].tolist() == ev == h_scan["round"].tolist()
+    np.testing.assert_array_equal(h_loop["n_selected"],
+                                  h_scan["n_selected"])
+    for k in ("comm_time", "test_acc", "avg_power"):
+        np.testing.assert_allclose(h_loop[k], h_scan[k], rtol=5e-4,
+                                   atol=1e-5, err_msg=k)
+        assert h_scan[k].shape == (len(ev),)
+
+
+def test_history_from_trajectory_layout():
+    """The device-array -> history conversion keeps the eval-point axis
+    aligned with eval_rounds and reproduces the loop engine's host-side
+    float64 avg_power math."""
+    rounds, eval_every, n_clients = 7, 3, 10
+    ev = eval_rounds(rounds, eval_every)
+    e = len(ev)
+    comm = jnp.arange(1.0, e + 1)
+    acc = jnp.linspace(0.1, 0.9, e)
+    pcum = jnp.arange(10.0, 10.0 + e)
+    nsel = jnp.arange(1, e + 1)
+    h = history_from_trajectory(rounds, eval_every, n_clients, comm, acc,
+                                pcum, nsel)
+    assert h["round"].tolist() == ev
+    assert h["avg_power"].dtype == np.float64
+    np.testing.assert_allclose(
+        h["avg_power"],
+        np.arange(10.0, 10.0 + e) / (np.asarray(ev) + 1) / n_clients)
+    assert h["n_selected"].dtype == np.int64
 
 
 def test_run_simulation_dispatches_on_engine(small_setup):

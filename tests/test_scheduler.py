@@ -208,6 +208,61 @@ def test_sample_selection_guarantee():
     assert int(jnp.sum(sel)) >= 1
 
 
+def test_uniform_selection_m_low_edge():
+    """M <= 0 (a degenerate matched-M) must clip to one participant, not
+    reach the score sort with m = 0 (sort[-1] silently selected almost
+    everyone before the clip)."""
+    from repro.core.scheduler import uniform_selection
+
+    for m_avg in (0.0, -3.0, 0.4):
+        for s in range(5):
+            sel, q, p = uniform_selection(jax.random.PRNGKey(s), 10, m_avg,
+                                          CH)
+            n_sel = int(jnp.sum(sel))
+            assert 1 <= n_sel <= max(1, int(np.ceil(max(m_avg, 0.0)))), \
+                (m_avg, s, n_sel)
+            assert bool(jnp.all(q >= 0.0)) and bool(jnp.all(q <= 1.0))
+            assert bool(jnp.all(jnp.isfinite(p))) and bool(jnp.all(p > 0))
+
+
+def test_uniform_selection_m_high_edge():
+    """M > N saturates at selecting everyone; the old code indexed the
+    sort out of range (undefined under jit)."""
+    from repro.core.scheduler import uniform_selection
+
+    for m_avg in (10.0, 25.0, 1e6):
+        sel, q, p = uniform_selection(jax.random.PRNGKey(1), 10, m_avg, CH)
+        assert int(jnp.sum(sel)) == 10, m_avg
+        assert float(q[0]) == 1.0
+        # P = Pbar N / M' with M' = N
+        np.testing.assert_allclose(np.asarray(p),
+                                   np.full(10, CH.p_bar, np.float32))
+
+
+def test_uniform_selection_integer_m_draws_exactly_m():
+    """With integer M (no ceil branch) and a.s.-distinct f32 scores, the
+    subset size is exactly M round after round."""
+    from repro.core.scheduler import uniform_selection
+
+    for s in range(8):
+        sel, _, _ = uniform_selection(jax.random.PRNGKey(s), 50, 7.0, CH)
+        assert int(jnp.sum(sel)) == 7, s
+
+
+def test_threshold_tie_breaking_keeps_all_tied():
+    """Selection is by value (score >= m-th largest), so exact ties at the
+    threshold all stay in — the documented semantics, shared by the
+    sequential sort and the client-sharded top-k merge. greedy_channel
+    exercises it directly through tied gains."""
+    from repro.core.policies import greedy_channel
+
+    gains = jnp.array([2.0, 2.0, 2.0, 1.0, 0.5], jnp.float32)
+    sel, q, p = greedy_channel(jax.random.PRNGKey(0), gains, 2, CH)
+    # m = 2, but three gains tie at the threshold value 2.0
+    np.testing.assert_array_equal(np.asarray(sel),
+                                  [True, True, True, False, False])
+
+
 def test_better_channel_higher_q():
     """Monotonicity: better instantaneous channel => selected more often."""
     gains = jnp.array([0.01, 0.1, 1.0, 10.0, 100.0])

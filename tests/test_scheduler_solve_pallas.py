@@ -1,0 +1,134 @@
+"""Pallas `scheduler_solve`: edge sizes, padded-lane hygiene, block overrides.
+
+The kernel pads the client vector to a whole number of blocks with
+gains = 1.0 / Z = 0 lanes; everything here pins that edge behavior — the
+sizes that straddle a block boundary, the hygiene of the pad lanes (no
+NaN/inf may be produced anywhere, since a compiler re-association could
+leak one into real lanes), parity with the `solve_round` jnp oracle to f32
+round-off, and a non-default ``block=`` override (the client-sharded
+engine's shard-local slices run with small blocks).
+
+Runs in interpret mode on CPU CI (``interpret=None`` auto-selects); on a
+TPU backend the same tests exercise the compiled kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import ChannelConfig, SchedulerConfig, solve_round
+from repro.kernels.scheduler_solve import scheduler_solve
+
+BLOCK = 128  # non-default on purpose (kernel default is 1024)
+EDGE_SIZES = [1, BLOCK - 1, BLOCK, BLOCK + 1, 3 * BLOCK + 17]
+
+CH = ChannelConfig(n_clients=100)
+CFG = SchedulerConfig(n_clients=100, model_bits=32 * 555178.0, lam=10.0,
+                      V=1000.0)
+
+
+def _kernel(gains, z, cfg=CFG, ch=CH, block=BLOCK):
+    return scheduler_solve(
+        gains, z, n=cfg.n_clients, v=cfg.V, lam=cfg.lam,
+        ell=cfg.model_bits, bandwidth=ch.bandwidth_hz, noise=ch.noise_power,
+        p_max=ch.p_max, p_bar=ch.p_bar, q_floor=cfg.q_floor, block=block)
+
+
+def _states(key, n):
+    gains = jnp.exp(jax.random.normal(key, (n,)) * 2.0).astype(jnp.float32)
+    z = (jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (n,)))
+         * 50.0).astype(jnp.float32)
+    return gains, z
+
+
+def _assert_matches_oracle(gains, z, cfg=CFG, ch=CH, block=BLOCK):
+    q_k, p_k = _kernel(gains, z, cfg, ch, block)
+    q_o, p_o = solve_round(gains, z, cfg, ch)
+    assert q_k.shape == p_k.shape == gains.shape
+    assert bool(jnp.all(jnp.isfinite(q_k)) & jnp.all(jnp.isfinite(p_k)))
+    np.testing.assert_allclose(np.asarray(q_k), np.asarray(q_o), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(p_k), np.asarray(p_o), rtol=1e-5,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("n", EDGE_SIZES)
+def test_edge_sizes_match_oracle(n):
+    """N below / at / just above / far past a block boundary."""
+    _assert_matches_oracle(*_states(jax.random.PRNGKey(n), n))
+
+
+@pytest.mark.parametrize("n", EDGE_SIZES)
+def test_padded_lane_hygiene(n):
+    """States that drive the solve to its branch boundaries (Z = 0 exactly,
+    gains at the modulation clip bounds, huge queues) must stay finite and
+    oracle-exact at every pad geometry — pad lanes (gains=1, z=0) go
+    through the same Z-floor/boundary branch and may not emit NaN/inf."""
+    lo, hi = CH.gain_bounds()
+    reps = -(-n // 6)  # ceil
+    gains = jnp.tile(jnp.array([lo, hi, 1.0, 1e-3, 1e3, 37.0],
+                               jnp.float32), reps)[:n]
+    z = jnp.tile(jnp.array([0.0, 0.0, 1e4, 5.0, 0.0, 1e-6], jnp.float32),
+                 reps)[:n]
+    _assert_matches_oracle(gains, z)
+
+
+def test_default_block_still_pads_clean():
+    """The default (1024-lane) block with a tiny N: 1019 pad lanes."""
+    gains, z = _states(jax.random.PRNGKey(0), 5)
+    q_d, p_d = scheduler_solve(
+        gains, z, n=CFG.n_clients, v=CFG.V, lam=CFG.lam,
+        ell=CFG.model_bits, bandwidth=CH.bandwidth_hz, noise=CH.noise_power,
+        p_max=CH.p_max, p_bar=CH.p_bar, q_floor=CFG.q_floor)
+    q_o, p_o = solve_round(gains, z, CFG, CH)
+    assert bool(jnp.all(jnp.isfinite(q_d)) & jnp.all(jnp.isfinite(p_d)))
+    np.testing.assert_allclose(np.asarray(q_d), np.asarray(q_o), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(p_d), np.asarray(p_o), rtol=1e-5,
+                               atol=1e-3)
+
+
+def test_block_override_does_not_change_values():
+    """Tiling is a layout choice: per-lane results must not depend on it."""
+    gains, z = _states(jax.random.PRNGKey(7), 200)
+    q64, p64 = _kernel(gains, z, block=64)
+    q128, p128 = _kernel(gains, z, block=128)
+    np.testing.assert_array_equal(np.asarray(q64), np.asarray(q128))
+    np.testing.assert_array_equal(np.asarray(p64), np.asarray(p128))
+
+
+def test_rejects_degenerate_shapes():
+    gains, z = _states(jax.random.PRNGKey(0), 4)
+    with pytest.raises(ValueError, match="block"):
+        _kernel(gains, z, block=0)
+    with pytest.raises(ValueError, match="at least one"):
+        _kernel(jnp.zeros((0,)), jnp.zeros((0,)))
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),    # PRNG seed
+       st.floats(min_value=0.1, max_value=1e3),            # lambda
+       st.floats(min_value=1.0, max_value=1e5))            # V
+def test_kernel_oracle_parity_property(seed, lam, v):
+    """Property form: random configs x random states at a
+    boundary-straddling size keep kernel/oracle parity to f32 round-off."""
+    cfg = SchedulerConfig(n_clients=100, model_bits=32 * 555178.0, lam=lam,
+                          V=v)
+    gains, z = _states(jax.random.PRNGKey(seed), BLOCK + 1)
+    _assert_matches_oracle(gains, z, cfg=cfg)
+
+
+def test_kernel_oracle_parity_deterministic_sweep():
+    """Fixed-seed fallback for the property above (hypothesis is optional):
+    6 configs x 4 edge sizes, kernel vs oracle."""
+    rng = np.random.default_rng(7)
+    for _ in range(6):
+        cfg = SchedulerConfig(n_clients=100, model_bits=32 * 555178.0,
+                              lam=float(10 ** rng.uniform(-1, 3)),
+                              V=float(10 ** rng.uniform(0, 5)))
+        for n in (1, BLOCK - 1, BLOCK, BLOCK + 1):
+            seed = int(rng.integers(0, 2 ** 31))
+            _assert_matches_oracle(*_states(jax.random.PRNGKey(seed), n),
+                                   cfg=cfg)
