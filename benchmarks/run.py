@@ -587,6 +587,85 @@ def bench_massive(prof):
     return results
 
 
+# ------------------------------------------------------------------ service
+
+def bench_service(prof):
+    """Multi-tenant online scheduler service: decisions/s and per-flush
+    latency (p50/p99) vs tenant count, batch size, and bucket mix.
+
+    The service (repro/service) serves the engines' per-round decision
+    step online: requests carry instantaneous gains + raw selection draws,
+    tenants are grouped into power-of-two N-buckets, and each bucket runs
+    as ONE jit(vmap) step with donated queue state. This bench registers
+    >= 1000 heterogeneous tenants across 3 N-buckets (each tenant its own
+    V/lam/ell/Pmax and policy) and measures steady-state serving:
+
+    * ``full`` — every tenant submits each round (throughput mode);
+    * ``batch64`` — random 64-tenant batches (latency mode);
+    * ``small100`` — a 100-tenant service, same mix (tenant-count axis).
+
+    JSON artifact: benchmarks/out/service.json. Latency is wall-clock per
+    ``flush()`` (host batching + jit dispatch + device step + host slice),
+    so it is an end-to-end number, not a kernel time.
+    """
+    import jax  # noqa: F401  (ensures backend init outside the timing)
+    from repro.service import SchedulerService
+    from repro.service.demo import (DEFAULT_MIX, demo_request,
+                                    register_demo_tenants)
+
+    rng = np.random.default_rng(0)
+    mix = DEFAULT_MIX   # buckets 32 / 128 / 512, >= 1000 tenants
+
+    def build(counts_scale=1.0):
+        svc = SchedulerService()
+        return svc, register_demo_tenants(svc, rng, mix,
+                                          scale=counts_scale)
+
+    def drive(svc, tenants, n_flushes, batch=None):
+        walls, served = [], 0
+        for _ in range(n_flushes):
+            subset = tenants if batch is None else [
+                tenants[j] for j in rng.choice(len(tenants), batch,
+                                               replace=False)]
+            reqs = [demo_request(rng, *t) for t in subset]
+            t0 = time.time()
+            for name, gains, raw in reqs:
+                svc.submit(name, gains, raw=raw)
+            svc.flush(log=False)
+            walls.append(time.time() - t0)
+            served += len(reqs)
+        return served, walls
+
+    flushes = max(6, min(20, prof.rounds // 2))
+    results = {"mix": [{"n": n, "tenants": c, "policy": p}
+                       for n, c, p in mix],
+               "flushes": flushes, "scenarios": {}}
+    svc, tenants = build()
+    scenarios = [("full", svc, tenants, None),
+                 ("batch64", svc, tenants, 64)]
+    svc100, tenants100 = build(counts_scale=0.1)
+    scenarios.append(("small100", svc100, tenants100, None))
+    for label, s, t, batch in scenarios:
+        # warm the compiled buckets; random small batches need several
+        # passes to visit the power-of-two batch shapes they will draw
+        drive(s, t, 1 if batch is None else 6, batch=batch)
+        served, walls = drive(s, t, flushes, batch=batch)
+        walls_ms = np.sort(np.asarray(walls)) * 1e3
+        dps = served / float(np.sum(walls))
+        entry = {
+            "tenants": len(t), "requests": served,
+            "decisions_per_sec": dps,
+            "p50_ms": float(np.percentile(walls_ms, 50)),
+            "p99_ms": float(np.percentile(walls_ms, 99)),
+        }
+        results["scenarios"][label] = entry
+        _emit(f"service_{label}", 1e6 * float(np.sum(walls)) / served,
+              f"decisions_per_sec={dps:.0f};tenants={len(t)};"
+              f"p50_ms={entry['p50_ms']:.1f};p99_ms={entry['p99_ms']:.1f}")
+    _dump("service", results)
+    return results
+
+
 # ------------------------------------------------------------------ kernels
 
 def bench_kernels(prof):
@@ -617,6 +696,7 @@ BENCHES = {
     "grid": bench_grid,
     "round": bench_round,
     "massive": bench_massive,
+    "service": bench_service,
     "fig2_cifar": bench_fig2_cifar,
     "fig3_lambda": bench_fig3_lambda,
     "fig4_femnist": bench_fig4_femnist,

@@ -1,0 +1,94 @@
+"""Multi-tenant online scheduling demo: thousands of FL deployments served
+from one process.
+
+Each *tenant* is an independent FL deployment — its own client count N,
+power budget, lambda/V trade-off, and selection policy — with its Eq. 9
+virtual power queues held server-side. The paper's key deployment property
+makes this an online service: the scheduler needs only INSTANTANEOUS CSI,
+so a request is just (tenant, this round's measured gains, selection
+draws) and serving is one batched Theorem-2 solve per power-of-two bucket
+(``repro.service``), with the engines' bitwise decision semantics.
+
+The demo registers ~1000 heterogeneous tenants across three N-buckets,
+drives a simulated request stream, prints serving throughput/latency, and
+closes the loop on the service's operational contract: snapshot
+mid-stream, keep serving, then restore the snapshot into a FRESH service
+and replay the logged tail — every decision comes back bit-identical.
+
+    PYTHONPATH=src python examples/scheduler_service.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.service import RequestLog, SchedulerService
+from repro.service.demo import demo_request, register_demo_tenants
+
+ROUNDS = 6
+
+
+def build_service(rng):
+    svc = SchedulerService()
+    return svc, register_demo_tenants(svc, rng)
+
+
+def one_round_requests(rng, tenants):
+    """Each tenant measures Rayleigh-ish gains and draws its raws."""
+    return [demo_request(rng, *t) for t in tenants]
+
+
+def main():
+    rng = np.random.default_rng(0)
+    svc, tenants = build_service(rng)
+    print(f"tenants: {len(tenants)} across buckets "
+          f"{sorted({k.n_bucket for k in svc.store.buckets()})} "
+          f"(policies: proposed + uniform)")
+
+    snap_at = ROUNDS // 2
+    snapshot = None
+    stream_rng = np.random.default_rng(1)
+    walls = []
+    for r in range(ROUNDS):
+        if r == snap_at:
+            snapshot = svc.snapshot()       # mid-stream checkpoint
+        reqs = one_round_requests(stream_rng, tenants)
+        t0 = time.time()
+        for name, gains, raw in reqs:
+            svc.submit(name, gains, raw=raw)
+        resp = svc.flush()
+        wall = time.time() - t0
+        walls.append(wall)
+        n_sel = sum(int(d.n_sel) for d in resp.values())
+        label = " (compile)" if r == 0 else ""
+        print(f"round {r}: served {len(resp)} tenants in {wall * 1e3:6.1f} ms "
+              f"({len(resp) / wall:7.0f} decisions/s), "
+              f"{n_sel} devices scheduled{label}")
+    steady = np.asarray(walls[1:]) * 1e3
+    print(f"steady-state: p50 {np.percentile(steady, 50):.1f} ms, "
+          f"p99 {np.percentile(steady, 99):.1f} ms per flush")
+
+    # a sample tenant's queue trajectory (the only cross-round state)
+    name = tenants[0][0]
+    st = svc.tenant_state(name)
+    print(f"tenant {name!r}: round {int(st.t)}, "
+          f"mean Z = {float(np.mean(st.z)):.3f} "
+          f"(Eq. 9 virtual power queues, held server-side)")
+
+    # --- the operational contract: restore + replay is bit-exact --------
+    svc2, _ = build_service(np.random.default_rng(0))   # same tenants
+    svc2.restore(snapshot)
+    tail = RequestLog()
+    tail.flushes = svc.log.flushes[snap_at:]
+    replayed = tail.replay(svc2)
+    last_live = {n: svc.tenant_state(n) for n, _, _ in tenants[:50]}
+    ok = all(
+        np.array_equal(last_live[n].z, svc2.tenant_state(n).z)
+        for n in last_live)
+    print(f"replayed {tail.n_requests} logged requests "
+          f"({len(replayed)} flushes) from the mid-stream snapshot: "
+          f"queues bit-identical = {ok}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,14 @@ Keys are '/'-joined tree paths so any nested dict/list/tuple/NamedTuple of
 arrays round-trips against a matching *template* pytree (restore is
 structure-driven, so sharded trees restore onto whatever sharding the
 template's arrays carry — host-local in this container).
+
+Dtype contract: npz cannot store bfloat16, so ``save_pytree`` widens bf16
+leaves to float32 (lossless — every bf16 is exactly representable) and
+``load_pytree`` casts every stored leaf back to the TEMPLATE leaf's dtype,
+so bf16/int32/mixed trees round-trip exactly (tests/test_substrates.py).
+Templates only need ``shape``/``dtype`` per leaf — ``jax.ShapeDtypeStruct``
+trees work, which is how the scheduler service restores tenant state
+without materializing a throwaway copy.
 """
 
 from __future__ import annotations

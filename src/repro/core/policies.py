@@ -48,8 +48,10 @@ import jax.numpy as jnp
 
 from repro.core.channel import ChannelConfig
 from repro.core.fences import pin
-from repro.core.scheduler import (SchedulerConfig, sample_selection,
-                                  solve_round, update_queues_z)
+from repro.core.scheduler import (SchedulerConfig, greedy_coeffs,
+                                  greedy_decide, sample_selection,
+                                  solve_round, solve_round_coeffs,
+                                  update_queues_z)
 
 
 def greedy_channel(key, gains: jax.Array, m: int, ch: ChannelConfig):
@@ -57,13 +59,11 @@ def greedy_channel(key, gains: jax.Array, m: int, ch: ChannelConfig):
 
     q is reported as the *realized* indicator (there is no valid inverse-
     propensity weight for never-selected clients; aggregation must fall
-    back to plain averaging over participants — biased under non-iid)."""
+    back to plain averaging over participants — biased under non-iid).
+    The math lives in :func:`repro.core.scheduler.greedy_decide`, shared
+    with the scheduler service's coefficient-operand form."""
     n = gains.shape[0]
-    thresh = -jnp.sort(-gains)[m - 1]
-    sel = gains >= thresh
-    q = sel.astype(jnp.float32)  # degenerate: q in {0,1}
-    p = jnp.full((n,), ch.p_bar * n / jnp.maximum(m, 1), jnp.float32)
-    return sel, q, p
+    return greedy_decide(gains, greedy_coeffs(n, float(m), ch))
 
 
 def proportional_gain(key, gains: jax.Array, m_avg: float,
@@ -105,13 +105,25 @@ def _aux0_ones(n: int) -> jax.Array:
 
 
 def _make_proposed(scfg: SchedulerConfig, ch: ChannelConfig, m_avg,
-                   solve_fn) -> PolicyStep:
-    solve = solve_fn or (lambda gains, z: solve_round(gains, z, scfg, ch))
+                   solve_fn, coeffs=None) -> PolicyStep:
+    """Algorithm 2. ``coeffs`` (a SolveCoeffs pytree, typically of traced
+    scalars passed through the caller's jit boundary) switches the solve
+    and the Eq. 9 queue update onto coefficient operands — the engines and
+    the scheduler service both use this form so their decisions agree bit
+    for bit (the operand contract, repro/core/scheduler.py). ``solve_fn``
+    still wins when given (the Pallas kernel path)."""
+    if solve_fn is not None:
+        solve = solve_fn
+    elif coeffs is not None:
+        solve = lambda gains, z: solve_round_coeffs(gains, z, coeffs)  # noqa: E731
+    else:
+        solve = lambda gains, z: solve_round(gains, z, scfg, ch)  # noqa: E731
+    pbar_src = ch if coeffs is None else coeffs
 
     def step(key, gains, st: PolicyState):
         q, p = solve(gains, st.z)
         sel = sample_selection(key, q, scfg.guarantee_one)
-        z = update_queues_z(st.z, q, p, ch)
+        z = update_queues_z(st.z, q, p, pbar_src)
         return sel, q, p, PolicyState(z, st.aux, st.t + 1)
 
     return step
@@ -263,19 +275,26 @@ def _lookup(name: str):
 
 
 def make_policy(name: str, scfg: SchedulerConfig, ch: ChannelConfig, *,
-                m_avg: float = 0.0, solve_fn=None, **params) -> PolicyStep:
+                m_avg: float = 0.0, solve_fn=None, coeffs=None,
+                **params) -> PolicyStep:
     """Bind a registered policy to its configuration.
 
     ``m_avg`` is the matched average participation level M (Section VI);
     required (> 0) by every baseline, ignored by ``proposed``. ``solve_fn``
     optionally overrides the Theorem-2 solve (e.g. the Pallas kernel) for
-    ``proposed``. Extra ``params`` are policy-specific (``q_floor``,
-    ``max_age``).
+    ``proposed``; ``coeffs`` (a SolveCoeffs of runtime operands) switches
+    ``proposed`` onto the coefficient-driven solve the engines and the
+    scheduler service share — the baselines are exact-selection policies
+    (comparisons, sorts, fills, one division) whose constants are
+    bit-stable either way, so they ignore it. Extra ``params`` are
+    policy-specific (``q_floor``, ``max_age``).
     """
     builder, _, needs_m = _lookup(name)
     if needs_m and not m_avg > 0.0:
         raise ValueError(f"policy {name!r} needs m_avg > 0 (matched average "
                          f"participation), got {m_avg!r}")
+    if name == "proposed" and coeffs is not None:
+        params = dict(params, coeffs=coeffs)
     return _fence(builder(scfg, ch, m_avg, solve_fn, **params))
 
 
@@ -295,3 +314,9 @@ def _fence(step: PolicyStep) -> PolicyStep:
         return pin(step(key, gains, st))
 
     return fenced
+
+
+# Public alias: the scheduler service fences its coefficient-driven policy
+# steps with the exact same discipline (same pins, same pytree shape), which
+# the bitwise-parity contract with the engines requires.
+fence_step = _fence

@@ -31,6 +31,7 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.channel import ChannelConfig, channel_rate
 from repro.core.lambertw import lambertw0
@@ -65,23 +66,147 @@ def init_state(cfg: SchedulerConfig) -> SchedulerState:
 
 # --------------------------------------------------------------------------
 # Per-client closed-form solve.
+#
+# The solve is written over a :class:`SolveCoeffs` bundle of scalar
+# operands rather than over the raw (SchedulerConfig, ChannelConfig)
+# fields. Two deployment modes share this one implementation:
+#
+# * the simulation engines bake the coefficients as CONSTANTS (host-folded
+#   in float64 from the Python-float configs, rounded once to float32 —
+#   exactly the constants a Python-float trace would bake);
+# * the multi-tenant scheduler service (repro.service) feeds them as
+#   TRACED per-tenant scalars, vmapped over a bucket of tenants.
+#
+# THE OPERAND CONTRACT: for two programs to produce bitwise-identical
+# q/P, the coefficients must have the same *provenance* in both — either
+# both baked as literals, or both passed as runtime operands through a
+# jit boundary. Mixing the two is NOT bit-stable: XLA/LLVM specialize a
+# kernel around literal constants (eliding x*1.0, folding bw into log2's
+# internal 1/ln2, forming FMAs the runtime-operand version cannot), which
+# drifts results by ~1 ulp — and ``optimization_barrier`` does NOT help,
+# because the barriers are consumed before the emitter makes those
+# choices (verified empirically; see tests/test_service.py's contract
+# suite). The engines therefore pass their coefficient bundle through
+# their top-level jit boundary as a runtime argument, matching the
+# service's traced per-tenant scalars. Runtime-operand programs ARE
+# bit-stable across array shapes, batching (vmap), and padding — the
+# property the whole service contract rests on (0 mismatches in a
+# 200-config stress across shapes 7..1537, buckets, and batch sizes).
 # --------------------------------------------------------------------------
 
-def _objective(q, p, gains, z, cfg: SchedulerConfig, ch: ChannelConfig):
+class SolveCoeffs(NamedTuple):
+    """Scalar operands of the Theorem-2 solve (one value per tenant/config).
+
+    Products are folded on the host in float64 and rounded once to f32 —
+    the same constants a jit trace of Python-float configs produces — so a
+    coefficient-driven solve and a config-driven solve are bitwise-equal.
+    Build with :func:`solve_coeffs`; stack leaves to vmap over tenants.
+    """
+
+    a_coef: jax.Array    # V lam ell ln2 / (N0 B): Eq. 16 argument scale
+    n0: jax.Array        # N0
+    bw: jax.Array        # B
+    p_max: jax.Array     # Pmax
+    lle_n: jax.Array     # lam ell N      (Eq. 17 rate term)
+    n_over_v: jax.Array  # N / V          (Eq. 17 queue term)
+    q_floor: jax.Array   # numerical floor keeping q in (0, 1]
+    n: jax.Array         # N (as f32)
+    lle: jax.Array       # lam ell        (objective comm term)
+    v: jax.Array         # V
+    p_bar: jax.Array     # Pbar
+
+
+def solve_coeffs(cfg: SchedulerConfig, ch: ChannelConfig) -> SolveCoeffs:
+    """Fold (cfg, ch) into the solve's scalar operands (host, f64 -> f32)."""
+    d = np.float64
+    f = np.float32
+    return SolveCoeffs(
+        a_coef=f(d(cfg.V) * d(cfg.lam) * d(cfg.model_bits) * d(_LN2)
+                 / (d(ch.noise_power) * d(ch.bandwidth_hz))),
+        n0=f(ch.noise_power), bw=f(ch.bandwidth_hz), p_max=f(ch.p_max),
+        lle_n=f(d(cfg.lam) * d(cfg.model_bits) * d(cfg.n_clients)),
+        n_over_v=f(d(cfg.n_clients) / d(cfg.V)), q_floor=f(cfg.q_floor),
+        n=f(cfg.n_clients), lle=f(d(cfg.lam) * d(cfg.model_bits)),
+        v=f(cfg.V), p_bar=f(ch.p_bar))
+
+
+def coeff_rate(gains, power, c) -> jax.Array:
+    """:func:`~repro.core.channel.channel_rate` over coefficient operands.
+
+    ``c`` needs ``bw`` / ``n0`` fields (a :class:`SolveCoeffs` or the
+    decision layer's account bundle) with the operand provenance described
+    in the module comment above.
+    """
+    return c.bw * jnp.log2(1.0 + gains * power / c.n0)
+
+
+def _objective_c(q, p, gains, z, c: SolveCoeffs):
     """Per-client drift-plus-penalty objective f(q, P) of Eq. (15)."""
-    rate = channel_rate(gains, p, ch)
-    y0 = (1.0 / (cfg.n_clients * q)
-          + cfg.lam * cfg.model_bits * q / jnp.maximum(rate, _EPS))
-    return cfg.V * y0 + z * (p * q - ch.p_bar)
+    rate = coeff_rate(gains, p, c)
+    y0 = 1.0 / (c.n * q) + c.lle * q / jnp.maximum(rate, _EPS)
+    return c.v * y0 + z * (p * q - c.p_bar)
+
+
+def _q_eq17_c(p, gains, z, c: SolveCoeffs):
+    """Eq. (17) for a given power; clipped into (q_floor, 1]."""
+    rate = coeff_rate(gains, p, c)
+    inv_sq = (c.lle_n / jnp.maximum(rate, _EPS)
+              + c.n_over_v * z * p)
+    q = jax.lax.rsqrt(jnp.maximum(inv_sq, _EPS))
+    return jnp.clip(q, c.q_floor, 1.0)
+
+
+def solve_candidates_coeffs(gains: jax.Array, z: jax.Array, c: SolveCoeffs):
+    """:func:`solve_candidates` over a (possibly traced) coefficient bundle."""
+    gains = gains.astype(jnp.float32)
+    z = z.astype(jnp.float32)
+    zs = jnp.maximum(z, _EPS)  # Z=0 -> A=inf -> boundary branch wins anyway
+
+    # Interior candidate (Eq. 16). NOTE: the paper prints
+    # A = V lam ell |h|^2 (log 2)^2 / (N0 B Z); re-deriving d f / d P = 0
+    # gives x (ln x)^2 = V lam ell |h|^2 ln(2) / (N0 B Z) — one power of
+    # ln 2, not two. The grid-search property test
+    # (tests/test_scheduler.py::test_closed_form_beats_grid) confirms the
+    # corrected constant; the paper's version is ~0.5% suboptimal in f.
+    a = c.a_coef * gains / zs
+    w = lambertw0(jnp.sqrt(a / 4.0))
+    p_int = c.n0 / gains * (a / (4.0 * jnp.maximum(w * w, _EPS)) - 1.0)
+    p_int = jnp.clip(p_int, 0.0, c.p_max)
+    q_int = _q_eq17_c(p_int, gains, z, c)
+
+    # Boundary candidate: P = Pmax (also Algorithm 2's t=0 branch when Z=0).
+    p_bnd = jnp.full_like(gains, c.p_max)
+    q_bnd = _q_eq17_c(p_bnd, gains, z, c)
+
+    # Keep the smaller objective (replaces the Hessian determinant test).
+    f_int = _objective_c(q_int, p_int, gains, z, c)
+    f_bnd = _objective_c(q_bnd, p_bnd, gains, z, c)
+    use_int = jnp.isfinite(f_int) & (f_int <= f_bnd)
+    return q_int, p_int, q_bnd, p_bnd, use_int
+
+
+def solve_round_coeffs(gains: jax.Array, z: jax.Array,
+                       c: SolveCoeffs) -> Tuple[jax.Array, jax.Array]:
+    """Theorem-2 solve from a coefficient bundle: -> (q, P), each (N,).
+
+    The service's per-tenant entry point; bitwise-equal to
+    :func:`solve_round` on the same (cfg, ch) by construction.
+    """
+    q_int, p_int, q_bnd, p_bnd, use_int = solve_candidates_coeffs(gains, z,
+                                                                  c)
+    q = jnp.where(use_int, q_int, q_bnd)
+    p = jnp.where(use_int, p_int, p_bnd)
+    return q, p
+
+
+def _objective(q, p, gains, z, cfg: SchedulerConfig, ch: ChannelConfig):
+    """Config-signature wrapper of :func:`_objective_c` (kept for tests)."""
+    return _objective_c(q, p, gains, z, solve_coeffs(cfg, ch))
 
 
 def _q_eq17(p, gains, z, cfg: SchedulerConfig, ch: ChannelConfig):
-    """Eq. (17) for a given power; clipped into (q_floor, 1]."""
-    rate = channel_rate(gains, p, ch)
-    inv_sq = (cfg.lam * cfg.model_bits * cfg.n_clients / jnp.maximum(rate, _EPS)
-              + cfg.n_clients / cfg.V * z * p)
-    q = jax.lax.rsqrt(jnp.maximum(inv_sq, _EPS))
-    return jnp.clip(q, cfg.q_floor, 1.0)
+    """Config-signature wrapper of :func:`_q_eq17_c`."""
+    return _q_eq17_c(p, gains, z, solve_coeffs(cfg, ch))
 
 
 def solve_candidates(gains: jax.Array, z: jax.Array, cfg: SchedulerConfig,
@@ -95,52 +220,30 @@ def solve_candidates(gains: jax.Array, z: jax.Array, cfg: SchedulerConfig,
     discarded one (tests/test_scheduler.py); :func:`solve_round` is the
     thin selection on top.
     """
-    gains = gains.astype(jnp.float32)
-    z = z.astype(jnp.float32)
-    zs = jnp.maximum(z, _EPS)  # Z=0 -> A=inf -> boundary branch wins anyway
-
-    # Interior candidate (Eq. 16). NOTE: the paper prints
-    # A = V lam ell |h|^2 (log 2)^2 / (N0 B Z); re-deriving d f / d P = 0
-    # gives x (ln x)^2 = V lam ell |h|^2 ln(2) / (N0 B Z) — one power of
-    # ln 2, not two. The grid-search property test
-    # (tests/test_scheduler.py::test_closed_form_beats_grid) confirms the
-    # corrected constant; the paper's version is ~0.5% suboptimal in f.
-    a = cfg.V * cfg.lam * cfg.model_bits * gains * _LN2 / (ch.noise_power
-                                                           * ch.bandwidth_hz * zs)
-    w = lambertw0(jnp.sqrt(a / 4.0))
-    p_int = ch.noise_power / gains * (a / (4.0 * jnp.maximum(w * w, _EPS)) - 1.0)
-    p_int = jnp.clip(p_int, 0.0, ch.p_max)
-    q_int = _q_eq17(p_int, gains, z, cfg, ch)
-
-    # Boundary candidate: P = Pmax (also Algorithm 2's t=0 branch when Z=0).
-    p_bnd = jnp.full_like(gains, ch.p_max)
-    q_bnd = _q_eq17(p_bnd, gains, z, cfg, ch)
-
-    # Keep the smaller objective (replaces the Hessian determinant test).
-    f_int = _objective(q_int, p_int, gains, z, cfg, ch)
-    f_bnd = _objective(q_bnd, p_bnd, gains, z, cfg, ch)
-    use_int = jnp.isfinite(f_int) & (f_int <= f_bnd)
-    return q_int, p_int, q_bnd, p_bnd, use_int
+    return solve_candidates_coeffs(gains, z, solve_coeffs(cfg, ch))
 
 
 def solve_round(gains: jax.Array, z: jax.Array, cfg: SchedulerConfig,
                 ch: ChannelConfig) -> Tuple[jax.Array, jax.Array]:
     """Vectorized Theorem-2 solve: gains, z of shape (N,) -> (q, P) each (N,).
 
-    Pure jnp (this is also the oracle for the Pallas `scheduler_solve` kernel).
+    Pure jnp (this is also the oracle for the Pallas `scheduler_solve`
+    kernel). Internally the configs are folded to a :class:`SolveCoeffs`
+    constant bundle, so this is literally :func:`solve_round_coeffs` with
+    baked coefficients — the service's bitwise contract rests on that.
     """
-    q_int, p_int, q_bnd, p_bnd, use_int = solve_candidates(gains, z, cfg, ch)
-    q = jnp.where(use_int, q_int, q_bnd)
-    p = jnp.where(use_int, p_int, p_bnd)
-    return q, p
+    return solve_round_coeffs(gains, z, solve_coeffs(cfg, ch))
 
 
 def update_queues_z(z: jax.Array, q: jax.Array, p: jax.Array,
-                    ch: ChannelConfig) -> jax.Array:
+                    ch) -> jax.Array:
     """Eq. (9) on the bare queue array: max(Z + P q - Pbar, 0).
 
     The single home of the queue dynamics — the SchedulerState form below
-    and the policy registry's PolicyState form both delegate here.
+    and the policy registry's PolicyState form both delegate here. ``ch``
+    only needs a ``p_bar`` field (a ChannelConfig, or a coefficient bundle
+    so the engines and the service share operand provenance — see the
+    module comment).
     """
     return jnp.maximum(z + p * q - ch.p_bar, 0.0)
 
@@ -210,6 +313,74 @@ def uniform_draw_m(take_hi: jax.Array, m_avg: float,
     return jnp.clip(m, 1, n_clients)
 
 
+class UniformCoeffs(NamedTuple):
+    """Scalar operands of the M-matched uniform baseline (exact ops only,
+    so constant- and operand-provenance runs agree bit for bit)."""
+
+    m_avg: jax.Array   # matched average participation M (f32)
+    q_val: jax.Array   # clip(M / N, 0, 1): the reported q
+    pn: jax.Array      # Pbar * N: numerator of P = Pbar N / M'
+    n: jax.Array       # N (i32: clips M' into [1, N])
+
+
+class GreedyCoeffs(NamedTuple):
+    """Scalar operands of the greedy top-M channel baseline."""
+
+    m: jax.Array       # M (i32)
+    pn: jax.Array      # Pbar * N
+
+
+def uniform_coeffs(n_clients: int, m_avg: float,
+                   ch: ChannelConfig) -> UniformCoeffs:
+    """Host-folded operands of :func:`uniform_decide` (f64 folds, f32)."""
+    d, f = np.float64, np.float32
+    return UniformCoeffs(
+        m_avg=f(m_avg),
+        q_val=np.clip(f(d(m_avg) / n_clients), f(0.0), f(1.0)),
+        pn=f(d(ch.p_bar) * n_clients), n=np.int32(n_clients))
+
+
+def greedy_coeffs(n_clients: int, m_avg: float,
+                  ch: ChannelConfig) -> GreedyCoeffs:
+    """Host-folded operands of :func:`greedy_decide`."""
+    return GreedyCoeffs(m=np.int32(max(1, int(round(m_avg)))),
+                        pn=np.float32(np.float64(ch.p_bar) * n_clients))
+
+
+def uniform_decide(raw, c: UniformCoeffs):
+    """The uniform baseline's decision on pre-drawn raws: the single home
+    of its math, shared by :func:`uniform_selection` (engine, baked
+    coefficients) and the scheduler service (traced per-tenant
+    coefficients). ``raw`` = {"take": (), "scores": (N',)} — N' may exceed
+    c.n when the service pads the client axis; pad scores must be < 0.
+    """
+    take_hi = raw["take"] < (c.m_avg - jnp.floor(c.m_avg))
+    m = uniform_draw_m(take_hi, c.m_avg, c.n)
+    thresh = -jnp.sort(-raw["scores"])[m - 1]
+    sel = raw["scores"] >= thresh
+    # q/p are f32 REGARDLESS of the scores dtype: under JAX_ENABLE_X64 the
+    # engines' raw uniforms draw as f64, and q/p must stay the f32 the
+    # whole accounting/selection chain (and the x64 CI leg) is pinned to
+    shape = raw["scores"].shape
+    q = jnp.full(shape, c.q_val, jnp.float32)
+    p = jnp.full(shape, (c.pn / jnp.maximum(m, 1)).astype(jnp.float32),
+                 jnp.float32)
+    return sel, q, p
+
+
+def greedy_decide(gains: jax.Array, c: GreedyCoeffs):
+    """Top-M instantaneous channels on given gains — the single home of
+    the greedy baseline's math (see :func:`uniform_decide`). Pad gains
+    must be below every real (clipped-positive) gain; q is the realized
+    indicator (no valid inverse-propensity weight exists — see
+    ``repro.core.policies.greedy_channel``)."""
+    thresh = -jnp.sort(-gains)[c.m - 1]
+    sel = gains >= thresh
+    q = sel.astype(jnp.float32)
+    p = jnp.full_like(gains, c.pn / jnp.maximum(c.m, 1))
+    return sel, q, p
+
+
 def uniform_selection(key: jax.Array, n_clients: int, m_avg: float,
                       ch: ChannelConfig):
     """FedAvg's uniform policy, strengthened as in the paper's Section VI.
@@ -220,19 +391,15 @@ def uniform_selection(key: jax.Array, n_clients: int, m_avg: float,
     constraint by design. Returns (selected, q, P). Score ties at the
     selection threshold keep every tied client (selection is by value, so
     the drawn subset can exceed M' only on exact f32 score collisions).
+
+    Draw + :func:`uniform_decide` — the PRNG consumption here is what
+    ``POLICY_DRAWS["uniform"]`` replicates for raw-carrying callers.
     """
     k1, k2, k3 = jax.random.split(key, 3)
-    take_hi = jax.random.uniform(k1) < (m_avg - jnp.floor(m_avg))
-    m = uniform_draw_m(take_hi, m_avg, n_clients)
-    # Uniform subset of size m via random scores.
-    scores = jax.random.uniform(k2, (n_clients,))
-    thresh = -jnp.sort(-scores)[m - 1]
-    sel = scores >= thresh
-    q = jnp.full((n_clients,),
-                 jnp.clip(m_avg / n_clients, 0.0, 1.0), jnp.float32)
-    p = jnp.full((n_clients,), ch.p_bar * n_clients / jnp.maximum(m, 1), jnp.float32)
+    raw = {"take": jax.random.uniform(k1),
+           "scores": jax.random.uniform(k2, (n_clients,))}
     del k3
-    return sel, q, p
+    return uniform_decide(raw, uniform_coeffs(n_clients, m_avg, ch))
 
 
 def estimate_avg_selected(key: jax.Array, sigmas: jax.Array, cfg: SchedulerConfig,

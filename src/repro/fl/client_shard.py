@@ -28,11 +28,16 @@ the participant-sharded round's per-mesh contracts:
   as the sequential engine: ``CHANNEL_RAW`` / ``POLICY_DRAWS`` split each
   step into its PRNG half and its elementwise half), and every elementwise
   stage is the same fenced code the sequential step runs.
-* the accounting island is EXACT on any mesh: its reductions always
-  associate as ``ACCOUNT_BLOCKS`` fixed blocks (``fl/sharding.py``), so the
-  sequential engine and every mesh width add the same partials in the same
-  order. Thresholds, argmaxes, packs, and merges are selections, not
-  arithmetic — exact by construction.
+* accounting association is mesh-invariant: the reductions always
+  associate as ``ACCOUNT_BLOCKS`` fixed blocks (``fl/sharding.py``), so
+  the sequential engine and every mesh width add the same partials in the
+  same order; float accounting agrees across meshes to ~1 ulp (the
+  residual is per-lane EMISSION drift of the operand-driven solve, not
+  reduction reassociation — see fl/sharding.py). Thresholds, argmaxes,
+  packs, and merges are selections, not arithmetic — so integer
+  accounting (n_selected, packed indices) stays exact in practice (pinned
+  by fixed seeds; a selection could in principle flip if a raw draw lands
+  inside the ~1 ulp cross-mesh q drift — see fl/sharding.py).
 * trained metrics (test_acc) drift only by reduction re-association in the
   surrounding program, ~1 ulp/round, like the other sharded paths.
 
@@ -51,14 +56,17 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core import ChannelConfig, SchedulerConfig
-from repro.core.channel import CHANNEL_RAW, channel_rate, make_channel
+from repro.core.channel import CHANNEL_RAW, make_channel
 from repro.core.fences import pin
 from repro.core.policies import (POLICIES, POLICY_DRAWS, PolicyState,
                                  init_policy_state, make_policy)
-from repro.core.scheduler import uniform_draw_m, update_queues_z
-from repro.fl.sharding import (ACCOUNT_BLOCKS, blocked_total,
-                               blocked_total_sharded, pad_client_axis,
-                               padded_len, shard_map)
+from repro.core.scheduler import (coeff_rate, greedy_coeffs,
+                                  solve_round_coeffs, uniform_coeffs,
+                                  uniform_draw_m, update_queues_z)
+from repro.fl.decision import (DecisionCoeffs, channel_obs, decision_coeffs,
+                               decision_step)
+from repro.fl.sharding import (ACCOUNT_BLOCKS, blocked_total_sharded,
+                               pad_client_axis, padded_len, shard_map)
 
 _I32_MAX = jnp.iinfo(jnp.int32).max
 
@@ -66,7 +74,7 @@ _I32_MAX = jnp.iinfo(jnp.int32).max
 # log() pad with 1.0 (log 1 = 0, no -inf), normals with 0.0. Pad lanes are
 # masked out of every selection and reduction; the fills only need to keep
 # the elementwise math finite.
-_CHANNEL_RAW_PAD = {
+CHANNEL_RAW_PAD = {
     "rayleigh": 1.0,
     "rician": 0.0,
     "lognormal": (1.0, 0.0),
@@ -76,7 +84,7 @@ _CHANNEL_RAW_PAD = {
 # Policy raw fills: proposed pads its selection uniforms with 2.0 (never
 # < q <= 1), uniform pads its scores with -1.0 (below any real score in
 # [0, 1), so never at/above the threshold).
-_POLICY_RAW_PAD = {
+POLICY_RAW_PAD = {
     "proposed": 2.0,
     "uniform": {"take": 0.0, "scores": -1.0},
     "greedy_channel": (),
@@ -162,15 +170,20 @@ def _pack_participants_sharded(sel, q, m_cap: int, n_local: int, axis_name):
 
 def _sharded_proposed(scfg: SchedulerConfig, ch: ChannelConfig, m_avg,
                       solve_fn, n_real: int, n_local: int, axis_name: str):
-    def step(raw, gains, z, aux, t, valid, local_ids):
-        q, p = solve_fn(gains, z)
+    def step(raw, gains, z, aux, t, valid, local_ids, co):
+        # solve_fn wins when given (the Pallas kernel); otherwise the
+        # coefficient-driven solve on the runtime bundle — the operand
+        # contract the sequential engine shares (repro/core/scheduler.py)
+        solve = solve_fn or (
+            lambda g, zz: solve_round_coeffs(g, zz, co.solve))
+        q, p = solve(gains, z)
         sel = (raw < q) & valid
         if scfg.guarantee_one:
             none = jax.lax.psum(jnp.sum(sel), axis_name) == 0
             score = jnp.where(valid, q, -jnp.inf)
             forced_at = _global_argmax(score, local_ids, axis_name)
             sel = jnp.where(none, local_ids == forced_at, sel)
-        z = update_queues_z(z, q, p, ch)
+        z = update_queues_z(z, q, p, co.solve)
         return sel, q, p, z, aux, t + 1
 
     return step
@@ -180,17 +193,20 @@ def _sharded_uniform(scfg: SchedulerConfig, ch: ChannelConfig, m_avg,
                      solve_fn, n_real: int, n_local: int, axis_name: str):
     m_hi = int(np.floor(m_avg)) + 1  # static bound: m' in [1, min(m_hi, N)]
     k_static = max(1, min(n_local, min(m_hi, n_real)))
+    # the same host-folded f32 coefficients the sequential uniform_decide
+    # uses — the scalar math must be f32 in BOTH engines or the mesh-1
+    # bitwise contract breaks on the x64 CI leg (Python-float expressions
+    # evaluate in f64 there)
+    c = uniform_coeffs(n_real, m_avg, ch)
 
-    def step(raw, gains, z, aux, t, valid, local_ids):
-        take_hi = raw["take"] < (m_avg - jnp.floor(m_avg))
-        m = uniform_draw_m(take_hi, m_avg, n_real)
+    def step(raw, gains, z, aux, t, valid, local_ids, co):
+        take_hi = raw["take"] < (c.m_avg - jnp.floor(c.m_avg))
+        m = uniform_draw_m(take_hi, c.m_avg, c.n)
         scores = jnp.where(valid, raw["scores"], -1.0)
         thresh = _top_m_threshold(scores, m, k_static, axis_name)
         sel = (raw["scores"] >= thresh) & valid
-        q = jnp.full((n_local,),
-                     jnp.clip(m_avg / n_real, 0.0, 1.0), jnp.float32)
-        p = jnp.full((n_local,),
-                     ch.p_bar * n_real / jnp.maximum(m, 1), jnp.float32)
+        q = jnp.full((n_local,), c.q_val)
+        p = jnp.full((n_local,), c.pn / jnp.maximum(m, 1))
         return sel, q, p, z, aux, t + 1
 
     return step
@@ -198,16 +214,16 @@ def _sharded_uniform(scfg: SchedulerConfig, ch: ChannelConfig, m_avg,
 
 def _sharded_greedy(scfg: SchedulerConfig, ch: ChannelConfig, m_avg,
                     solve_fn, n_real: int, n_local: int, axis_name: str):
-    m = max(1, int(round(m_avg)))
+    c = greedy_coeffs(n_real, m_avg, ch)
+    m = int(c.m)
     k_static = max(1, min(n_local, min(m, n_real)))
 
-    def step(raw, gains, z, aux, t, valid, local_ids):
+    def step(raw, gains, z, aux, t, valid, local_ids, co):
         score = jnp.where(valid, gains, -jnp.inf)
         thresh = _top_m_threshold(score, m, k_static, axis_name)
         sel = (gains >= thresh) & valid
         q = sel.astype(jnp.float32)
-        p = jnp.full((n_local,),
-                     ch.p_bar * n_real / jnp.maximum(m, 1), jnp.float32)
+        p = jnp.full((n_local,), c.pn / jnp.maximum(c.m, 1))
         return sel, q, p, z, aux, t + 1
 
     return step
@@ -262,12 +278,15 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
                           solve_fn=None, devices=None):
     """Build the one-``shard_map`` scheduling step for one round.
 
-    Returns ``schedule(raw_ch, raw_pol, pol_state, ch_state) -> (t_comm,
-    power, n_sel, sel_idx, sel_valid, q_sel, pol_state', ch_state')`` where
-    the raws are the FULL-SHAPE (N,) PRNG draws of ``draw_channel_raw`` /
-    ``draw_policy_raw`` (drawn outside, so their bits are mesh-invariant)
-    and the states carry the sequential engines' unpadded (N,) layout —
-    padding to whole accounting blocks happens inside, per call.
+    Returns ``schedule(raw_ch, raw_pol, pol_state, ch_state, co) ->
+    (t_comm, power, n_sel, sel_idx, sel_valid, q_sel, pol_state',
+    ch_state')`` where the raws are the FULL-SHAPE (N,) PRNG draws of
+    ``draw_channel_raw`` / ``draw_policy_raw`` (drawn outside, so their
+    bits are mesh-invariant), the states carry the sequential engines'
+    unpadded (N,) layout — padding to whole accounting blocks happens
+    inside, per call — and ``co`` is the runtime ``DecisionCoeffs`` bundle
+    (replicated across the mesh; the operand contract of
+    ``repro/fl/decision.py``).
     """
     n = int(sigmas.shape[0])
     devices = validate_client_shards(n_shards, sim_policy, sim_channel,
@@ -282,7 +301,7 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
         scfg, ch, m_avg, solve_fn, n, n_local, "client")
     sig_pad = pad_client_axis(sigmas, n_pad, 0.0)
 
-    def shard_body(raw_ch, raw_pol, z, aux, t, cst, sig):
+    def shard_body(raw_ch, raw_pol, z, aux, t, cst, sig, co):
         local_ids = (_axis_start("client", n_local)
                      + jnp.arange(n_local, dtype=jnp.int32))
         valid = local_ids < n
@@ -293,10 +312,10 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
         gains, cst = jax.lax.optimization_barrier((gains, cst))
         raw_pol, z, aux = pin((raw_pol, z, aux))
         sel, q, p, z, aux, t = jax.lax.optimization_barrier(
-            policy_step(raw_pol, gains, z, aux, t, valid, local_ids))
-        rate = channel_rate(gains, p, ch)
+            policy_step(raw_pol, gains, z, aux, t, valid, local_ids, co))
+        rate = coeff_rate(gains, p, co.acct)
         t_comm = blocked_total_sharded(
-            jnp.where(sel, scfg.model_bits / jnp.maximum(rate, 1e-9), 0.0),
+            jnp.where(sel, co.acct.ell / jnp.maximum(rate, 1e-9), 0.0),
             "client", n_shards)
         power = blocked_total_sharded(
             jnp.where(valid, p * q, 0.0), "client", n_shards)
@@ -312,10 +331,12 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
         lambda k: draw_channel_raw(sim_channel, k, n, ckw), dummy_key)
     raw_pol_eg = jax.eval_shape(
         lambda k: draw_policy_raw(sim_policy, k, n), dummy_key)
+    co_eg = decision_coeffs(scfg, ch)
     in_specs = (
         jax.tree.map(_client_spec, raw_ch_eg),
         jax.tree.map(_client_spec, raw_pol_eg),
-        P("client"), P("client"), P(), P(None, "client"), P("client"))
+        P("client"), P("client"), P(), P(None, "client"), P("client"),
+        jax.tree.map(lambda _: P(), co_eg))  # coeffs: replicated scalars
     out_specs = (P(), P(), P(), P(), P(), P(), P("client"), P("client"),
                  P(), P(None, "client"))
     sharded = shard_map(shard_body, mesh=mesh, in_specs=in_specs,
@@ -332,16 +353,17 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
             else jax.lax.with_sharding_constraint(
                 x, NamedSharding(mesh, _client_spec(x))), raw)
 
-    def schedule(raw_ch, raw_pol, pol_state: PolicyState, ch_state):
-        raw_ch = _pad_raw(constrain(raw_ch), _CHANNEL_RAW_PAD[sim_channel],
+    def schedule(raw_ch, raw_pol, pol_state: PolicyState, ch_state, co):
+        raw_ch = _pad_raw(constrain(raw_ch), CHANNEL_RAW_PAD[sim_channel],
                           n_pad)
         raw_pol = _pad_raw(constrain(raw_pol),
-                           _POLICY_RAW_PAD[sim_policy], n_pad)
+                           POLICY_RAW_PAD[sim_policy], n_pad)
         z = pad_client_axis(pol_state.z, n_pad, 0.0)
         aux = pad_client_axis(pol_state.aux, n_pad, 0.0)
         cst = pad_client_axis(ch_state, n_pad, 0.0)
         (t_comm, power, n_sel, sel_idx, sel_valid, q_sel, z, aux, t,
-         cst) = sharded(raw_ch, raw_pol, z, aux, pol_state.t, cst, sig_pad)
+         cst) = sharded(raw_ch, raw_pol, z, aux, pol_state.t, cst, sig_pad,
+                        co)
         return (t_comm, power, n_sel, sel_idx, sel_valid, q_sel,
                 PolicyState(z[:n], aux[:n], t), cst[..., :n])
 
@@ -382,57 +404,56 @@ def make_schedule_runner(sigmas: jax.Array, scfg: SchedulerConfig,
     bit for bit; tests/test_client_sharded.py's massive leg checks this at
     N = 10^5).
     """
-    from repro.fl.engine import make_solve_fn
+    from repro.fl.engine import resolve_solve_fn
 
     n = int(sigmas.shape[0])
-    solve = solve_fn or make_solve_fn(scfg, ch, solver)
+    solve = resolve_solve_fn(scfg, ch, solver, solve_fn)
     chan = make_channel(channel, sigmas, ch, **dict(channel_params))
+    co_host = decision_coeffs(scfg, ch)
     if client_shards:
         schedule = make_sharded_schedule(
             policy, channel, channel_params, scfg, ch, sigmas,
             n_shards=client_shards, m_cap=m_cap, m_avg=m_avg,
             solve_fn=solve, devices=devices)
 
-        def round_fn(pol_state, ch_state, k):
+        def round_fn(pol_state, ch_state, k, co):
             k_ch, k_sel, _ = jax.random.split(k, 3)
             raw_ch = draw_channel_raw(channel, k_ch, n,
                                       dict(channel_params))
             raw_pol = draw_policy_raw(policy, k_sel, n)
             (t_comm, power, n_sel, _, _, _, pol_state,
-             ch_state) = schedule(raw_ch, raw_pol, pol_state, ch_state)
+             ch_state) = schedule(raw_ch, raw_pol, pol_state, ch_state, co)
             return pol_state, ch_state, t_comm, power, n_sel
     else:
-        step = make_policy(policy, scfg, ch, m_avg=m_avg, solve_fn=solve)
-
-        def round_fn(pol_state, ch_state, k):
+        def round_fn(pol_state, ch_state, k, co):
+            # the sequential reference IS the shared decision layer (the
+            # same function the scan engine and the service run)
+            step = make_policy(policy, scfg, ch, m_avg=m_avg,
+                               solve_fn=solve, coeffs=co.solve)
             k_ch, k_sel, _ = jax.random.split(k, 3)
-            gains, ch_state = chan.step(k_ch, ch_state)
-            gains, ch_state = jax.lax.optimization_barrier(
-                (gains, ch_state))
-            sel, q, p, pol_state = jax.lax.optimization_barrier(
-                step(k_sel, gains, pol_state))
-            rate = channel_rate(gains, p, ch)
-            t_comm, power = jax.lax.optimization_barrier(
-                (blocked_total(jnp.where(
-                    sel, scfg.model_bits / jnp.maximum(rate, 1e-9), 0.0)),
-                 blocked_total(p * q)))
-            return pol_state, ch_state, t_comm, power, jnp.sum(sel)
+            gains, ch_state = channel_obs(chan.step, k_ch, ch_state)
+            sel, q, p, t_comm, power, n_sel, pol_state = decision_step(
+                step, co.acct, k_sel, gains, pol_state)
+            return pol_state, ch_state, t_comm, power, n_sel
 
     from repro.fl.engine import CHANNEL_INIT_TAG
 
     @jax.jit
-    def runner(key):
+    def _runner(key, co):
         cst0 = chan.init(jax.random.fold_in(key, CHANNEL_INIT_TAG))
         pst0 = init_policy_state(policy, n)
 
         def body(carry, _):
             pst, cst, k = carry
             k, kr = jax.random.split(k)
-            pst, cst, t_comm, power, n_sel = round_fn(pst, cst, kr)
+            pst, cst, t_comm, power, n_sel = round_fn(pst, cst, kr, co)
             return (pst, cst, k), (t_comm, power, n_sel)
 
         _, out = jax.lax.scan(body, (pst0, cst0, key), None, length=rounds)
         return out
+
+    def runner(key):
+        return _runner(key, co_host)
 
     return runner
 
@@ -443,7 +464,8 @@ def make_schedule_runner(sigmas: jax.Array, scfg: SchedulerConfig,
 
 def make_client_sharded_round(ds, sim, scfg: SchedulerConfig,
                               ch: ChannelConfig, sigmas: jax.Array,
-                              solve_fn=None):
+                              solve_fn=None,
+                              coeffs: DecisionCoeffs = None):
     """The client-sharded ``sim_round`` for the scan engine.
 
     Same signature and carry layout as ``make_sim_round``'s product —
@@ -454,7 +476,7 @@ def make_client_sharded_round(ds, sim, scfg: SchedulerConfig,
     as the sequential engine trains them (same packed indices, same batch
     draws, same masked aggregate).
     """
-    from repro.fl.engine import make_solve_fn, resolve_wire_dtype
+    from repro.fl.engine import resolve_solve_fn, resolve_wire_dtype
     from repro.fl.round import local_sgd, masked_aggregate, sample_batches
     from repro.models.registry import make_model
 
@@ -465,7 +487,8 @@ def make_client_sharded_round(ds, sim, scfg: SchedulerConfig,
     n = ds.n_clients
     spec = make_model(sim.model, ds, **dict(sim.model_params))
     wire = resolve_wire_dtype(sim.wire_dtype)
-    solve = solve_fn or make_solve_fn(scfg, ch, sim.solver)
+    solve = resolve_solve_fn(scfg, ch, sim.solver, solve_fn)
+    co = coeffs if coeffs is not None else decision_coeffs(scfg, ch)
     schedule = make_sharded_schedule(
         sim.policy, sim.channel, sim.channel_params, scfg, ch, sigmas,
         n_shards=sim.client_shards, m_cap=sim.m_cap, m_avg=sim.uniform_m,
@@ -476,7 +499,7 @@ def make_client_sharded_round(ds, sim, scfg: SchedulerConfig,
         raw_ch = draw_channel_raw(sim.channel, k_ch, n, sim.channel_params)
         raw_pol = draw_policy_raw(sim.policy, k_sel, n)
         (t_comm, power, n_sel, sel_idx, sel_valid, q_sel, pol_state,
-         ch_state) = schedule(raw_ch, raw_pol, pol_state, ch_state)
+         ch_state) = schedule(raw_ch, raw_pol, pol_state, ch_state, co)
         imgs, labs = sample_batches(k_bat, ds.client_images,
                                     ds.client_labels, sel_idx, sim.m_cap,
                                     sim.local_steps, sim.batch)

@@ -37,6 +37,14 @@ single ``shard_map`` call across devices) lives in ``repro.fl.grid`` and is
 built from the same round core (:func:`make_round_core`), so per-config grid
 trajectories match :func:`run_simulation_scan` bit for bit.
 
+The per-round decision pipeline itself (channel obs -> Theorem-2 solve ->
+selection -> Z-update -> accounting) lives in ``repro.fl.decision`` and is
+shared verbatim with the client-sharded runner and the multi-tenant online
+scheduler service (``repro.service``); its scalar coefficients cross every
+runner's jit boundary as RUNTIME ARGUMENTS (the operand contract,
+``repro/core/scheduler.py``), which is what makes a served decision
+bitwise-equal to an engine decision.
+
 Round math is deliberately NOT shared with the legacy loop engine — the
 parity test (tests/test_engine.py) checks two independent implementations
 against each other on the same PRNG key.
@@ -57,10 +65,11 @@ from repro.core import (ChannelConfig, SchedulerConfig, channel_rate,
                         make_channel, make_policy)
 from repro.core.policies import POLICY_IDS  # noqa: F401  (re-exported)
 from repro.data.synthetic import FederatedDataset
+from repro.fl.decision import (DecisionCoeffs, channel_obs, decision_coeffs,
+                               decision_step)
 from repro.fl.round import (local_sgd, make_sharded_round_update,
                             masked_aggregate, pack_participants,
                             sample_batches)
-from repro.fl.sharding import blocked_total
 from repro.models.registry import make_model
 
 # fold_in tag consumed by stateful channel inits (keeps the round-key chain
@@ -154,13 +163,15 @@ def make_round_core(ds: FederatedDataset, sim: SimConfig,
     """The channel/policy-agnostic round body shared by the scan engine and
     the shard_map grid.
 
-    Returns ``round_core(channel_step, policy_step, rate_cfg, params,
+    Returns ``round_core(channel_step, policy_step, acct, params,
     pol_state, ch_state, key) -> (params, pol_state, ch_state, t_comm,
     power, n_sel)`` where ``channel_step(key, state) -> (gains, state)`` and
     ``policy_step(key, gains, state) -> (sel, q, p, state)`` come from the
-    registries (bound per cell by the grid). Key-split order and all
-    accounting mirror the legacy engine exactly, so grid, scan, and loop
-    trajectories agree on common configurations.
+    registries (bound per cell by the grid) and ``acct`` is the runtime
+    ``AccountCoeffs`` bundle (the operand contract — see
+    ``repro/fl/decision.py``). Key-split order and all accounting mirror
+    the legacy engine exactly, so grid, scan, and loop trajectories agree
+    on common configurations.
 
     What trains is ``sim.model`` resolved through the model registry
     (``repro.models.registry``). ``sim.participant_shards >= 1`` routes the
@@ -185,30 +196,16 @@ def make_round_core(ds: FederatedDataset, sim: SimConfig,
             sim.participant_shards, aggregation=sim.aggregation,
             wire_dtype=wire)
 
-    def round_core(channel_step, policy_step, rate_cfg, params, pol_state,
+    def round_core(channel_step, policy_step, acct, params, pol_state,
                    ch_state, key):
         k_ch, k_sel, k_bat = jax.random.split(key, 3)
-        gains, ch_state = channel_step(k_ch, ch_state)
-        # The barriers pin the step outputs so the consumer chains below
-        # (rate/log2, the training gather) cannot fuse INTO the step
-        # computations — XLA makes that choice per surrounding program,
-        # which would drift f32 results by a ulp per round and break the
-        # grid <-> run_simulation_scan bitwise contract (tests/test_grid.py).
-        gains, ch_state = jax.lax.optimization_barrier((gains, ch_state))
-        sel, q, p, pol_state = jax.lax.optimization_barrier(
-            policy_step(k_sel, gains, pol_state))
-        # comm time: TDMA sum over selected (Eq. 8 denominator); power is
-        # sum_n E[P_n q_n] this round. The accounting island is fenced on
-        # both sides for the same reason as the step outputs above (its
-        # log2 chain otherwise fuses with whatever the surrounding program
-        # offers, e.g. differently per per-device config count). The sums
-        # run through the fixed-block mesh-invariant reduce so the
-        # client-sharded engine reproduces them bit for bit on any mesh.
-        rate = channel_rate(gains, p, rate_cfg)
-        t_comm, power = jax.lax.optimization_barrier(
-            (blocked_total(jnp.where(sel, scfg.model_bits
-                                     / jnp.maximum(rate, 1e-9), 0.0)),
-             blocked_total(p * q)))
+        # The observation + decision + accounting pipeline is the shared
+        # decision layer (repro/fl/decision.py) — the exact function the
+        # scheduler service serves online, which is what the service's
+        # bitwise-parity contract rests on.
+        gains, ch_state = channel_obs(channel_step, k_ch, ch_state)
+        sel, q, p, t_comm, power, n_sel, pol_state = decision_step(
+            policy_step, acct, k_sel, gains, pol_state)
         # pick up to m_cap participants (nonzero packs left)
         sel_idx, sel_valid = pack_participants(sel, m_cap)
         q_sel = q[sel_idx]
@@ -226,15 +223,28 @@ def make_round_core(ds: FederatedDataset, sim: SimConfig,
                                     sim.local_steps), (imgs, labs))
             new_params = masked_aggregate(params, updated, sel_valid,
                                           q_sel, n, sim.aggregation, wire)
-        return (new_params, pol_state, ch_state, t_comm, power,
-                jnp.sum(sel))
+        return (new_params, pol_state, ch_state, t_comm, power, n_sel)
 
     return round_core
 
 
+def resolve_solve_fn(scfg: SchedulerConfig, ch: ChannelConfig, solver: str,
+                     solve_fn=None):
+    """The engine's solve override: an explicit ``solve_fn`` wins, the
+    Pallas kernel is built for ``solver="pallas"``, and ``None`` is
+    returned for the jnp path — which then runs the coefficient-driven
+    ``solve_round_coeffs`` on the runtime bundle (the operand contract)."""
+    if solve_fn is not None:
+        return solve_fn
+    if solver == "jnp":
+        return None
+    return make_solve_fn(scfg, ch, solver)
+
+
 def make_sim_round(ds: FederatedDataset, sim: SimConfig,
                    scfg: SchedulerConfig, ch: ChannelConfig,
-                   sigmas: jax.Array, solve_fn=None):
+                   sigmas: jax.Array, solve_fn=None,
+                   coeffs: Optional[DecisionCoeffs] = None):
     """Bind :func:`make_round_core` to one concrete channel model + policy.
 
     Returns ``sim_round(params, pol_state, ch_state, key)``— pure,
@@ -244,21 +254,28 @@ def make_sim_round(ds: FederatedDataset, sim: SimConfig,
     whole scheduling pipeline through the client-sharded ``shard_map`` path
     (``fl/client_shard.py``) — bitwise-identical at mesh size 1, exact
     accounting island on any mesh (tests/test_client_sharded.py).
+
+    ``coeffs`` is the decision layer's scalar bundle. The engine runners
+    call this INSIDE their jitted entry points with the traced bundle
+    (operand contract, ``repro/fl/decision.py``); the default builds host
+    constants for standalone use (benchmarks' legacy drive pattern).
     """
+    co = coeffs if coeffs is not None else decision_coeffs(scfg, ch)
     if sim.client_shards:
         from repro.fl.client_shard import make_client_sharded_round
         return make_client_sharded_round(ds, sim, scfg, ch, sigmas,
-                                         solve_fn)
-    solve = solve_fn or make_solve_fn(scfg, ch, sim.solver)
+                                         solve_fn, coeffs=co)
+    solve = resolve_solve_fn(scfg, ch, sim.solver, solve_fn)
     channel = make_channel(sim.channel, sigmas, ch,
                            **dict(sim.channel_params))
     policy_step = make_policy(sim.policy, scfg, ch, m_avg=sim.uniform_m,
-                              solve_fn=solve, **dict(sim.policy_params))
+                              solve_fn=solve, coeffs=co.solve,
+                              **dict(sim.policy_params))
     round_core = make_round_core(ds, sim, scfg)
 
     def sim_round(params, pol_state, ch_state, key):
-        return round_core(channel.step, policy_step, ch, params, pol_state,
-                          ch_state, key)
+        return round_core(channel.step, policy_step, co.acct, params,
+                          pol_state, ch_state, key)
 
     return sim_round
 
@@ -315,14 +332,24 @@ def make_chunk_runner(ds: FederatedDataset, sim: SimConfig,
     Exposed separately from :func:`run_simulation_scan` so callers that
     drive many simulations (benchmarks, sweeps over checkpoints) can build
     once, warm each chunk length, and reuse the compiled function.
+
+    The decision-layer coefficient bundle crosses the jit boundary as a
+    runtime argument (supplied by the returned wrapper) — the operand
+    contract that makes the engine's per-round decisions bitwise-equal to
+    the multi-tenant service's (``repro/fl/decision.py``).
     """
-    sim_round = make_sim_round(ds, sim, scfg, ch, sigmas, solve_fn)
     eval_fn = make_eval_fn(ds, sim)
+    co_host = decision_coeffs(scfg, ch)
 
     @functools.partial(jax.jit, static_argnames=("n_rounds",),
                        donate_argnums=(0,))
-    def run_chunk(carry, n_rounds):
+    def _run_chunk(carry, co, n_rounds):
+        sim_round = make_sim_round(ds, sim, scfg, ch, sigmas, solve_fn,
+                                   coeffs=co)
         return scan_chunk(sim_round, eval_fn, carry, n_rounds)
+
+    def run_chunk(carry, n_rounds):
+        return _run_chunk(carry, co_host, n_rounds)
 
     return run_chunk
 
@@ -389,19 +416,27 @@ def make_config_runner(ds: FederatedDataset, sim: SimConfig,
                        scfg: SchedulerConfig, ch: ChannelConfig,
                        sigmas: jax.Array, solve_fn=None):
     """Jit the full single-config trajectory: ``runner(params, key) ->
-    (comm_cum, test_acc, power_cum, n_selected)``, each (E,)."""
-    sim_round = make_sim_round(ds, sim, scfg, ch, sigmas, solve_fn)
+    (comm_cum, test_acc, power_cum, n_selected)``, each (E,).
+
+    The coefficient bundle rides the jit boundary as a runtime argument
+    (operand contract, ``repro/fl/decision.py``)."""
     eval_fn = make_eval_fn(ds, sim)
     channel = make_channel(sim.channel, sigmas, ch,
                            **dict(sim.channel_params))
     n = scfg.n_clients
+    co_host = decision_coeffs(scfg, ch)
 
     @jax.jit
-    def runner(params, key):
+    def _runner(params, key, co):
+        sim_round = make_sim_round(ds, sim, scfg, ch, sigmas, solve_fn,
+                                   coeffs=co)
         pol0 = init_policy_state(sim.policy, n)
         ch0 = channel.init(jax.random.fold_in(key, CHANNEL_INIT_TAG))
         return run_config_chunks(sim_round, eval_fn, sim.rounds,
                                  sim.eval_every, params, pol0, ch0, key)
+
+    def runner(params, key):
+        return _runner(params, key, co_host)
 
     return runner
 
@@ -463,12 +498,20 @@ def make_sweep_runner(sigmas: jax.Array, scfg: SchedulerConfig,
     """
     n = scfg.n_clients
     scfg_run = dataclasses.replace(scfg, guarantee_one=guarantee_one)
-    solve = make_solve_fn(scfg_run, ch, solver)
+    solve = resolve_solve_fn(scfg_run, ch, solver)
     chan = make_channel(channel, sigmas, ch, **dict(channel_params))
-    step = make_policy(policy, scfg_run, ch, m_avg=m_avg, solve_fn=solve,
-                       **(policy_params or {}))
+    co_host = decision_coeffs(scfg_run, ch)
 
-    def one_seed(cfg_key):
+    def one_seed(cfg_key, co):
+        # the policy binds to the runtime coefficient bundle like every
+        # other engine (the operand contract, repro/fl/decision.py); the
+        # sweep's own lightweight accounting (plain sums, not the blocked
+        # reduce) is deliberately kept — it is statistical output, not
+        # part of any bitwise contract
+        step = make_policy(policy, scfg_run, ch, m_avg=m_avg,
+                           solve_fn=solve, coeffs=co.solve,
+                           **(policy_params or {}))
+
         def body(carry, k):
             pst, cst = carry
             k_ch, k_sel = jax.random.split(k)
@@ -488,7 +531,10 @@ def make_sweep_runner(sigmas: jax.Array, scfg: SchedulerConfig,
         return (jnp.cumsum(t_comm), power, jnp.cumsum(power) / denom / n,
                 nsel)
 
-    return jax.jit(jax.vmap(one_seed))
+    _runner = jax.jit(
+        lambda seed_keys, co: jax.vmap(lambda k: one_seed(k, co))(
+            seed_keys))
+    return lambda seed_keys: _runner(seed_keys, co_host)
 
 
 def run_sweep(key, sigmas: jax.Array, scfg: SchedulerConfig,

@@ -53,9 +53,10 @@ from repro.core import ChannelConfig, SchedulerConfig, resolve_sigmas
 from repro.core.channel import CHANNEL_MODELS
 from repro.core.policies import POLICIES, init_policy_state, make_policy
 from repro.data.synthetic import FederatedDataset
+from repro.fl.decision import decision_coeffs
 from repro.fl.engine import (CHANNEL_INIT_TAG, SimConfig, eval_rounds,
-                             make_eval_fn, make_round_core, make_solve_fn,
-                             run_config_chunks)
+                             make_eval_fn, make_round_core,
+                             resolve_solve_fn, run_config_chunks)
 from repro.fl.sharding import shard_map
 
 
@@ -157,9 +158,10 @@ def make_grid_runner(ds: FederatedDataset, sim: SimConfig,
     mesh = Mesh(np.array(devices), ("grid",))
 
     sigma_table = jnp.stack([resolve_sigmas(d, n) for d in spec.sigma_dists])
-    solve = make_solve_fn(scfg, ch, sim.solver)
+    solve = resolve_solve_fn(scfg, ch, sim.solver)
     round_core = make_round_core(ds, sim, scfg)
     eval_fn = make_eval_fn(ds, sim)
+    co_host = decision_coeffs(scfg, ch)
 
     def make_cell(ci, pi):
         """One (channel, policy) cell: statically-bound config program."""
@@ -167,10 +169,13 @@ def make_grid_runner(ds: FederatedDataset, sim: SimConfig,
         pname, pparams = spec.policy_entries()[pi]
         init_fn, step_fn = CHANNEL_MODELS[cname]
         ckw = dict(cparams)
-        policy_step = make_policy(pname, scfg, ch, m_avg=sim.uniform_m,
-                                  solve_fn=solve, **dict(pparams))
 
-        def one_config(params, sid, key):
+        def one_config(params, sid, key, co):
+            # the policy binds to the RUNTIME coefficient bundle (operand
+            # contract, repro/fl/decision.py) — same as run_simulation_scan
+            policy_step = make_policy(pname, scfg, ch, m_avg=sim.uniform_m,
+                                      solve_fn=solve, coeffs=co.solve,
+                                      **dict(pparams))
             sig = sigma_table[sid]
             ch_state = init_fn(jax.random.fold_in(key, CHANNEL_INIT_TAG),
                                sig, ch, **ckw)
@@ -180,8 +185,8 @@ def make_grid_runner(ds: FederatedDataset, sim: SimConfig,
                 return step_fn(k, st, sig, ch, **ckw)
 
             def sim_round(p, pst, cst, k):
-                return round_core(channel_step, policy_step, ch, p, pst,
-                                  cst, k)
+                return round_core(channel_step, policy_step, co.acct, p,
+                                  pst, cst, k)
 
             # the same traced trajectory program as run_simulation_scan —
             # sharing the structure end to end is what makes grid cells
@@ -194,18 +199,24 @@ def make_grid_runner(ds: FederatedDataset, sim: SimConfig,
 
     cell_fns = [make_cell(ci, pi) for ci, pi in spec.cells()]
 
-    def shard_fn(params, sigma_ids, keys):
+    def shard_fn(params, sigma_ids, keys, co):
         # one sequential lax.map per cell: a config executes exactly its
         # own channel/policy code — no lax.switch, no masked branches
         return tuple(
-            jax.lax.map(lambda cfg, f=f: f(params, *cfg), (sids, ks))
+            jax.lax.map(lambda cfg, f=f: f(params, *cfg, co), (sids, ks))
             for f, sids, ks in zip(cell_fns, sigma_ids, keys))
 
     sharded = shard_map(
         shard_fn, mesh=mesh,
-        in_specs=(P(), P("grid"), P("grid")),
+        in_specs=(P(), P("grid"), P("grid"),
+                  jax.tree.map(lambda _: P(), co_host)),
         out_specs=P("grid"))
-    return jax.jit(sharded), len(devices)
+    jitted = jax.jit(sharded)
+
+    def runner(params, sigma_ids, keys):
+        return jitted(params, sigma_ids, keys, co_host)
+
+    return runner, len(devices)
 
 
 def pad_to_multiple(arr: np.ndarray, multiple: int) -> np.ndarray:

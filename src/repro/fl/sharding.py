@@ -7,18 +7,29 @@ Two layers live here:
   ``check_rep`` -> ``check_vma``; every caller needs the check OFF because
   the bodies close over unpartitioned constants).
 * the **mesh-invariant blocked reduction** behind the client-sharded
-  scheduling path's exact accounting contract: a float32 sum over the
-  (N,) client axis whose bits do not depend on how many devices the axis
-  is sharded over. The sum is always associated as ``ACCOUNT_BLOCKS``
+  scheduling path's accounting contract: a float32 sum over the (N,)
+  client axis whose ASSOCIATION does not depend on how many devices the
+  axis is sharded over. The sum is always associated as ``ACCOUNT_BLOCKS``
   fixed contiguous blocks — block partials first, then one fixed-order
   reduce over the (ACCOUNT_BLOCKS,) partial vector — and every stage is
-  fenced with ``optimization_barrier`` so XLA compiles the identical
+  fenced with ``optimization_barrier`` so XLA builds the identical
   reduction graph in every surrounding program. A D-device shard of the
   client axis owns ``ACCOUNT_BLOCKS / D`` whole blocks, computes their
   partials locally, and an ``all_gather`` reassembles the (ACCOUNT_BLOCKS,)
   vector in global block order — so the sequential engine (D absent), the
   mesh-1 shard, and any wider mesh all add the same numbers in the same
-  order (tests/test_client_sharded.py asserts bit equality).
+  order. At mesh size 1 this is bit-for-bit the sequential reduce; across
+  mesh widths the association is identical but the EMISSION of the
+  per-lane summand chains is not guaranteed (LLVM inlines transcendental
+  expansions and contracts multiplies into adds differently per kernel
+  shape — unavoidable since the decision layer's coefficients became
+  runtime operands for the scheduler service's bitwise contract, see
+  repro/core/scheduler.py), so cross-mesh float accounting agrees to
+  ~1 ulp. Integer accounting (n_selected, packed indices) is exact in
+  practice and pinned by the suite's fixed seeds — though in principle a
+  Bernoulli draw could land inside the ~1 ulp cross-mesh q drift and
+  flip one selection (probability ~2^-23 per drifting lane-round)
+  (tests/test_client_sharded.py).
 """
 
 from __future__ import annotations

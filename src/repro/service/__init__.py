@@ -1,0 +1,29 @@
+"""Multi-tenant online scheduler service: bucket-batched Theorem-2 serving.
+
+The paper's scheduler needs only instantaneous CSI — all cross-round state
+lives in the Eq. 9 virtual queues — so the whole scheduling layer factors
+into a stateless-per-request online service over a per-tenant queue store.
+This package is that service: each *tenant* is one FL deployment (its own
+N, power budget, lam/V, policy, and persistent queues), requests carry the
+tenant's measured gains + selection draws, and serving is the engines'
+shared decision step (``repro/fl/decision.py``) batched over power-of-two
+buckets with donated state.
+
+Binding contract: a served decision is bitwise-equal to the decision
+``run_simulation_scan`` would take for the same configuration on the same
+gains stream, and replaying a logged session is bit-exact
+(tests/test_service.py).
+"""
+
+from repro.service.batching import Decision, SchedulerService
+from repro.service.replay import LoggedRequest, RequestLog
+from repro.service.state import BucketKey, TenantSpec, TenantStore
+from repro.service.step import (SERVICE_POLICIES, make_bucket_step,
+                                policy_coeffs)
+
+__all__ = [
+    "Decision", "SchedulerService",
+    "LoggedRequest", "RequestLog",
+    "BucketKey", "TenantSpec", "TenantStore",
+    "SERVICE_POLICIES", "make_bucket_step", "policy_coeffs",
+]

@@ -1,0 +1,252 @@
+"""Request batching + the multi-tenant ``SchedulerService`` facade.
+
+Requests carry instantaneous gains (the paper's only per-round input) and
+the policy's raw selection draws. ``flush()`` groups the queued requests
+into their tenants' buckets, pads each bucket's batch to a power-of-two
+row count, and serves every bucket with ONE ``jit(vmap)`` step per bucket
+shape (``repro/service/step.py``) — donated state, no per-tenant
+dispatch. Multiple requests for one tenant in a single flush are served
+in submission order across consecutive *waves* (a wave touches each
+tenant at most once, so state updates never race).
+
+The batch row axis pads with sentinel rows (row index = T): the gather
+clamps them onto an arbitrary real tenant's inputs (garbage compute,
+discarded) and the scatter drops their state writes — pad rows can never
+alter a real tenant's bits, which the padding-hygiene test pins.
+
+Every flush is appended to an in-memory :class:`~repro.service.replay.
+RequestLog`; replaying a log from the starting snapshot reproduces every
+response bit for bit (the service is deterministic: all randomness
+arrives with the requests).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple
+
+import jax
+import numpy as np
+
+from repro.core.channel import ChannelConfig
+from repro.core.policies import POLICY_DRAWS
+from repro.core.scheduler import SchedulerConfig
+from repro.fl.client_shard import POLICY_RAW_PAD
+from repro.service.replay import LoggedRequest, RequestLog
+from repro.service.state import BucketKey, TenantSpec, TenantStore
+from repro.service.step import make_bucket_step
+
+GAINS_PAD = 0.0  # below every clipped channel gain (gain_bounds lo > 0)
+
+
+class Decision(NamedTuple):
+    """One served scheduling decision (host arrays, tenant's real N)."""
+
+    sel: np.ndarray      # (N,) bool participation indicators
+    q: np.ndarray        # (N,) f32 selection probabilities
+    p: np.ndarray        # (N,) f32 transmit powers
+    t_comm: np.float32   # TDMA round communication time (Eq. 8 sum)
+    power: np.float32    # sum_n P_n q_n this round
+    n_sel: np.int64      # participants this round
+
+
+class _Pending(NamedTuple):
+    tenant: str
+    gains: np.ndarray
+    raw: object
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+def _pad_lane(x: np.ndarray, width: int, fill) -> np.ndarray:
+    out = np.full((width,), fill, x.dtype)
+    out[: x.shape[0]] = x
+    return out
+
+
+class SchedulerService:
+    """Online multi-tenant Theorem-2 scheduling service.
+
+    >>> svc = SchedulerService()
+    >>> svc.add_tenant("cityA", scfg, ch)                 # Algorithm 2
+    >>> svc.submit("cityA", gains, key=k)                 # one round's CSI
+    >>> decision = svc.flush()["cityA"]                   # (sel, q, p) + accounting
+
+    ``solver="pallas"`` swaps the Theorem-2 solve for the tiled Pallas
+    kernel (``repro.kernels.scheduler_solve``); each bucket must then be
+    configuration-homogeneous (kernel parameters are compile-time static)
+    and the bitwise-parity contract relaxes to the kernel's float32
+    round-off. The default ``"jnp"`` path serves heterogeneous tenants
+    from one compiled program per bucket and is bitwise-equal to
+    ``run_simulation_scan``'s decisions (tests/test_service.py).
+    """
+
+    def __init__(self, solver: str = "jnp", log_requests: bool = True):
+        """``log_requests=False`` disables the replay log entirely: the
+        log retains every request's gains/raws on the host, which at
+        production rates is unbounded memory growth — long-running
+        deployments should either disable it, or snapshot + prune
+        ``self.log.flushes`` on their checkpoint cadence (replay needs
+        the state snapshot taken at the log's first retained flush)."""
+        if solver not in ("jnp", "pallas"):
+            raise ValueError(f"unknown solver {solver!r} "
+                             "(want 'jnp'|'pallas')")
+        self.solver = solver
+        self.log_requests = log_requests
+        self.store = TenantStore()
+        self.log = RequestLog()
+        self._queue: List[_Pending] = []
+        self._steps: Dict[BucketKey, object] = {}
+
+    # ------------------------------------------------------------ tenants
+    def add_tenant(self, name: str, scfg: SchedulerConfig,
+                   ch: ChannelConfig, policy: str = "proposed",
+                   m_avg: float = 0.0) -> TenantSpec:
+        spec = self.store.add(TenantSpec(name=name, scfg=scfg, ch=ch,
+                                         policy=policy, m_avg=m_avg))
+        # Rebuild the bucket's step: required for pallas (its solve_fn is
+        # rebuilt against the new tenant set's homogeneity); harmless for
+        # jnp (the grown state shape misses the old jit cache either way).
+        self._steps.pop(spec.bucket, None)
+        return spec
+
+    def raw_structure(self, name: str):
+        """An example raw-draw pytree for this tenant (log loading)."""
+        spec = self.store.spec(name)
+        return POLICY_DRAWS[spec.policy](jax.random.PRNGKey(0), spec.n)
+
+    # ------------------------------------------------------------ serving
+    def submit(self, name: str, gains, raw=None, key=None) -> None:
+        """Queue one round's scheduling request for a tenant.
+
+        ``gains`` are the tenant's instantaneous channel gains (positive,
+        shape (N,)). Exactly one of ``raw`` (the policy's pre-drawn raw
+        selection draws, ``POLICY_DRAWS`` layout) or ``key`` (a PRNG key
+        the service draws them from — the same split the engines use)
+        must be given.
+        """
+        spec = self.store.spec(name)
+        gains = np.asarray(gains, np.float32)
+        if gains.shape != (spec.n,):
+            raise ValueError(f"tenant {name!r} expects gains of shape "
+                             f"({spec.n},), got {gains.shape}")
+        if not np.all(gains > 0.0):
+            # every channel model emits gains clipped >= gain_bounds()[0]
+            # > 0; non-positive gains would tie greedy's threshold with
+            # the 0.0 pad fill (pad lanes selected) and divide by zero in
+            # the Theorem-2 solve
+            raise ValueError(f"tenant {name!r} gains must be positive "
+                             "(channel gains are clipped above 0)")
+        if (raw is None) == (key is None):
+            raise ValueError("pass exactly one of raw= or key=")
+        if raw is None:
+            raw = POLICY_DRAWS[spec.policy](key, spec.n)
+        raw = jax.tree.map(np.asarray, raw)
+        self._queue.append(_Pending(name, gains, raw))
+
+    def flush(self, log: bool = True) -> Dict[str, Decision]:
+        """Serve every queued request; return ``{tenant: Decision}``.
+
+        A tenant submitted k times in one flush is served k times, in
+        order (k waves); the returned dict carries its LAST decision. The
+        flush is appended to the replay log only AFTER it fully serves —
+        a flush that raises logs nothing (the log must contain exactly
+        the requests whose queue updates happened, or replay diverges);
+        its requests are dropped from the queue, and queue state may have
+        advanced for the waves that completed.
+        """
+        requests, self._queue = self._queue, []
+        responses: Dict[str, Decision] = {}
+        pending = requests
+        while pending:
+            wave, seen, rest = [], set(), []
+            for r in pending:
+                (rest if r.tenant in seen else wave).append(r)
+                seen.add(r.tenant)
+            responses.update(self._serve_wave(wave))
+            pending = rest
+        if log and self.log_requests and requests:
+            self.log.append_flush(
+                [LoggedRequest(*r) for r in requests])
+        return responses
+
+    def _bucket_step(self, bkey: BucketKey, bucket):
+        if bkey not in self._steps:
+            solve_fn = None
+            if self.solver == "pallas":
+                solve_fn = self._pallas_solve(bkey, bucket)
+            self._steps[bkey] = make_bucket_step(
+                bkey.policy, bkey.n_bucket, bkey.acct_len,
+                bkey.guarantee_one, solve_fn=solve_fn)
+        return self._steps[bkey]
+
+    def _pallas_solve(self, bkey: BucketKey, bucket):
+        from repro.fl.engine import make_solve_fn
+
+        configs = {(s.scfg, s.ch) for s in bucket.tenants}
+        if len(configs) > 1:
+            raise ValueError(
+                f"solver='pallas' needs bucket {bkey.as_string()!r} to be "
+                "configuration-homogeneous (kernel parameters are "
+                f"compile-time static); it mixes {len(configs)} configs")
+        scfg, ch = next(iter(configs))
+        return make_solve_fn(scfg, ch, "pallas",
+                             block=min(1024, bkey.n_bucket))
+
+    def _serve_wave(self, wave: List[_Pending]) -> Dict[str, Decision]:
+        by_bucket: Dict[BucketKey, List[_Pending]] = {}
+        for r in wave:
+            by_bucket.setdefault(self.store.spec(r.tenant).bucket,
+                                 []).append(r)
+        out: Dict[str, Decision] = {}
+        buckets = self.store.buckets()
+        for bkey, reqs in by_bucket.items():
+            bucket = buckets[bkey]
+            step = self._bucket_step(bkey, bucket)
+            b_pad = _next_pow2(len(reqs))
+            nb = bkey.n_bucket
+            rows = np.full((b_pad,), bucket.size, np.int32)  # pad: dropped
+            gains = np.zeros((b_pad, nb), np.float32)
+            raw_rows = []
+            fills = POLICY_RAW_PAD[bkey.policy]
+            for i, r in enumerate(reqs):
+                rows[i] = self.store.row(r.tenant)
+                gains[i] = _pad_lane(r.gains, nb, GAINS_PAD)
+                raw_rows.append(jax.tree.map(
+                    lambda x, f: x if np.ndim(x) == 0
+                    else _pad_lane(np.asarray(x), nb, f), r.raw, fills))
+            for _ in range(b_pad - len(reqs)):   # sentinel-row payloads
+                raw_rows.append(jax.tree.map(
+                    lambda x: np.zeros_like(np.asarray(x)), raw_rows[0]))
+            raw = jax.tree.map(lambda *xs: np.stack(xs), *raw_rows)
+            sel, q, p, t_comm, power, n_sel, new_state = step(
+                bucket.state, bucket.coeffs, bucket.acct, bucket.n_real,
+                rows, gains, raw)
+            bucket.state = new_state      # old buffers were donated
+            sel, q, p = np.asarray(sel), np.asarray(q), np.asarray(p)
+            t_comm, power = np.asarray(t_comm), np.asarray(power)
+            n_sel = np.asarray(n_sel)
+            for i, r in enumerate(reqs):
+                n = self.store.spec(r.tenant).n
+                out[r.tenant] = Decision(
+                    sel=sel[i, :n], q=q[i, :n], p=p[i, :n],
+                    t_comm=t_comm[i], power=power[i],
+                    n_sel=np.int64(n_sel[i]))
+        return out
+
+    # --------------------------------------------------- state management
+    def tenant_state(self, name: str):
+        return self.store.tenant_state(name)
+
+    def snapshot(self):
+        return self.store.snapshot()
+
+    def restore(self, snap) -> None:
+        self.store.restore(snap)
+
+    def save(self, path: str) -> None:
+        self.store.save(path)
+
+    def load(self, path: str) -> None:
+        self.store.load(path)

@@ -1,0 +1,252 @@
+"""Tenant registry + bucketed pytree state store for the scheduler service.
+
+Each *tenant* is one FL deployment: its own client count N, scheduler
+hyper-parameters (V, lam, ell, q_floor, guarantee_one), wireless
+configuration (Pmax, Pbar, B, N0), selection policy, and — the only
+cross-round state the paper's scheduler needs — its persistent Eq. 9
+virtual power queues Z (plus the registry's ``PolicyState`` scratch).
+That instantaneous-CSI property is exactly why the whole scheduling layer
+factors into this store + a stateless-per-request step.
+
+Tenants are grouped into *buckets* keyed by
+``(policy, n_bucket, acct_len, guarantee_one)``:
+
+* ``n_bucket`` — the power-of-two client-axis width the tenant's (N,)
+  arrays are padded to (one compiled serving program per bucket shape);
+* ``acct_len`` — ``padded_len(N)``, the accounting-reduce length that
+  keeps the blocked association identical to the engines'
+  (``repro/fl/sharding.py``); tenants in one power-of-two class but
+  different 96-blocks therefore land in sibling buckets;
+* ``guarantee_one`` — a static branch of the selection code.
+
+Per bucket the store holds stacked device arrays: the ``PolicyState``
+leaves ((T, n_bucket) queues/scratch, (T,) round counters), the
+per-tenant coefficient bundles ((T,) scalar leaves — the operand form of
+``repro/core/scheduler.py``), and the real client counts. The state
+arrays are the ones the serving step donates and scatters back into.
+
+Snapshot/restore rides ``repro.checkpoint.io``: a snapshot is the
+``{bucket-key-string: PolicyState}`` pytree (host copies, safe against
+donation), and ``save``/``load`` round-trip it through the flattened-key
+npz format.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import load_pytree, save_pytree
+from repro.core.channel import ChannelConfig
+from repro.core.policies import POLICIES, PolicyState, policy_aux_init
+from repro.core.scheduler import SchedulerConfig
+from repro.fl.decision import account_coeffs
+from repro.fl.sharding import padded_len
+from repro.service.step import SERVICE_POLICIES, policy_coeffs
+
+
+def bucket_width(n: int) -> int:
+    """The power-of-two client-axis width a tenant of N clients pads to."""
+    return max(8, 1 << (int(n) - 1).bit_length())
+
+
+class BucketKey(NamedTuple):
+    policy: str
+    n_bucket: int
+    acct_len: int
+    guarantee_one: bool
+
+    def as_string(self) -> str:
+        """Stable string form (npz snapshot keys, logs)."""
+        return (f"{self.policy}|b{self.n_bucket}|a{self.acct_len}"
+                f"|g{int(self.guarantee_one)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One deployment's full scheduling configuration."""
+
+    name: str
+    scfg: SchedulerConfig
+    ch: ChannelConfig
+    policy: str = "proposed"
+    m_avg: float = 0.0       # matched M — required (> 0) by the baselines
+
+    @property
+    def n(self) -> int:
+        return self.scfg.n_clients
+
+    @property
+    def bucket(self) -> BucketKey:
+        return BucketKey(self.policy, bucket_width(self.n),
+                         padded_len(self.n), self.scfg.guarantee_one)
+
+
+class _Bucket:
+    """Stacked device arrays for one bucket's tenants."""
+
+    def __init__(self, key: BucketKey):
+        self.key = key
+        self.tenants: list = []          # TenantSpec, row order
+        self.state: Optional[PolicyState] = None
+        self.coeffs = None               # stacked policy-coeff pytree
+        self.acct = None                 # stacked AccountCoeffs
+        self.n_real = None               # (T,) int32
+
+    @property
+    def size(self) -> int:
+        return len(self.tenants)
+
+    def row_state(self, spec: TenantSpec) -> PolicyState:
+        """A fresh padded state row for one tenant (zeros beyond N)."""
+        nb = self.key.n_bucket
+        z = np.zeros((nb,), np.float32)
+        aux = np.zeros((nb,), np.float32)
+        aux[: spec.n] = np.asarray(policy_aux_init(spec.policy, spec.n))
+        return PolicyState(z=z, aux=aux, t=np.zeros((), np.int32))
+
+    def materialize(self):
+        """(Re)build the stacked device arrays from the tenant list."""
+        rows = [self.row_state(s) for s in self.tenants]
+        self.state = PolicyState(
+            z=jnp.asarray(np.stack([r.z for r in rows])),
+            aux=jnp.asarray(np.stack([r.aux for r in rows])),
+            t=jnp.asarray(np.stack([r.t for r in rows])))
+        co = [policy_coeffs(s.policy, s.scfg, s.ch, s.m_avg)
+              for s in self.tenants]
+        ac = [account_coeffs(s.scfg, s.ch) for s in self.tenants]
+        self.coeffs = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)),
+                                   *co)
+        self.acct = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)),
+                                 *ac)
+        self.n_real = jnp.asarray(
+            np.array([s.n for s in self.tenants], np.int32))
+
+
+class TenantStore:
+    """Registry of tenants + their bucketed, donatable queue state."""
+
+    def __init__(self):
+        self._tenants: Dict[str, TenantSpec] = {}
+        self._rows: Dict[str, int] = {}
+        self._buckets: Dict[BucketKey, _Bucket] = {}
+        self._dirty: set = set()
+
+    # ------------------------------------------------------------ registry
+    def add(self, spec: TenantSpec) -> TenantSpec:
+        if spec.name in self._tenants:
+            raise ValueError(f"tenant {spec.name!r} already registered")
+        if spec.policy not in SERVICE_POLICIES:
+            raise ValueError(
+                f"policy {spec.policy!r} is not servable (servable: "
+                f"{SERVICE_POLICIES}; the others need global state an "
+                "instantaneous-CSI request cannot carry)")
+        if POLICIES[spec.policy][2] and not spec.m_avg > 0.0:
+            raise ValueError(f"policy {spec.policy!r} needs m_avg > 0 "
+                             f"(matched participation), got {spec.m_avg!r}")
+        if spec.n < 1:
+            raise ValueError(f"tenant {spec.name!r} needs n_clients >= 1")
+        if (spec.policy == "greedy_channel"
+                and round(spec.m_avg) > spec.n):
+            # the engine's greedy step indexes sort(gains)[m-1] and simply
+            # cannot build with m > N; with bucket padding m > N would
+            # instead tie the threshold into the pad lanes
+            raise ValueError(
+                f"tenant {spec.name!r}: greedy_channel needs "
+                f"round(m_avg) <= n_clients, got {spec.m_avg!r} > {spec.n}")
+        bucket = self._buckets.setdefault(spec.bucket, _Bucket(spec.bucket))
+        self._tenants[spec.name] = spec
+        self._rows[spec.name] = bucket.size
+        bucket.tenants.append(spec)
+        self._dirty.add(spec.bucket)
+        return spec
+
+    def spec(self, name: str) -> TenantSpec:
+        if name not in self._tenants:
+            raise KeyError(f"unknown tenant {name!r}")
+        return self._tenants[name]
+
+    def row(self, name: str) -> int:
+        return self._rows[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._tenants
+
+    def __len__(self) -> int:
+        return len(self._tenants)
+
+    @property
+    def tenants(self) -> Dict[str, TenantSpec]:
+        return dict(self._tenants)
+
+    def buckets(self) -> Dict[BucketKey, "_Bucket"]:
+        """Materialized buckets (registration order preserved per bucket).
+
+        Registering a tenant re-materializes only its own bucket — fresh
+        tenants start with zero queues; existing tenants' state is kept.
+        """
+        for key in list(self._dirty):
+            b = self._buckets[key]
+            old_state, old_size = b.state, 0
+            if old_state is not None:
+                old_size = int(old_state.z.shape[0])
+            b.materialize()
+            if old_state is not None and old_size:
+                # keep the served queues of previously-registered tenants
+                b.state = PolicyState(
+                    z=b.state.z.at[:old_size].set(old_state.z),
+                    aux=b.state.aux.at[:old_size].set(old_state.aux),
+                    t=b.state.t.at[:old_size].set(old_state.t))
+            self._dirty.discard(key)
+        return self._buckets
+
+    def bucket_of(self, name: str) -> _Bucket:
+        return self.buckets()[self.spec(name).bucket]
+
+    # ------------------------------------------------------- state access
+    def tenant_state(self, name: str) -> PolicyState:
+        """One tenant's live (unpadded) PolicyState, as host arrays."""
+        spec = self.spec(name)
+        b = self.bucket_of(name)
+        r = self._rows[name]
+        return PolicyState(
+            z=np.asarray(b.state.z[r, : spec.n]),
+            aux=np.asarray(b.state.aux[r, : spec.n]),
+            t=np.asarray(b.state.t[r]))
+
+    # --------------------------------------------------- snapshot/restore
+    def snapshot(self) -> Dict[str, PolicyState]:
+        """Host copy of every bucket's state (safe against donation)."""
+        return {k.as_string(): jax.tree.map(np.asarray, b.state)
+                for k, b in self.buckets().items()}
+
+    def restore(self, snap: Dict[str, PolicyState]) -> None:
+        """Install a snapshot taken from an identically-registered store."""
+        by_string = {k.as_string(): k for k in self.buckets()}
+        if set(snap) != set(by_string):
+            raise ValueError(
+                f"snapshot buckets {sorted(snap)} do not match the "
+                f"registered tenants' buckets {sorted(by_string)}")
+        for s, st in snap.items():
+            b = self._buckets[by_string[s]]
+            st = PolicyState(*st) if not isinstance(st, PolicyState) else st
+            for field, got, want in zip(PolicyState._fields, st,
+                                        b.state):
+                if np.shape(got) != want.shape:
+                    raise ValueError(
+                        f"snapshot bucket {s!r} leaf {field!r} has shape "
+                        f"{np.shape(got)}, store has {want.shape}")
+            b.state = jax.tree.map(jnp.asarray, st)
+
+    def save(self, path: str) -> None:
+        """Persist the snapshot through ``repro.checkpoint.io``."""
+        save_pytree(path, self.snapshot())
+
+    def load(self, path: str) -> None:
+        """Restore from :meth:`save`'s npz (tenants must be registered)."""
+        template = self.snapshot()
+        self.restore(load_pytree(path, template))

@@ -1,0 +1,177 @@
+"""Per-bucket serving step: one ``jit(vmap)`` over a padded tenant batch.
+
+The serving pipeline per request is EXACTLY the engines' decision layer
+(``repro/fl/decision.py``): Theorem-2 solve -> Bernoulli selection ->
+Eq. 9 queue update (for ``proposed``) -> TDMA comm-time / power
+accounting. What this module adds is the multi-tenant batched form:
+
+* every tenant's scalar configuration is a row of a stacked coefficient
+  pytree (the ``SolveCoeffs`` operand form of ``repro/core/scheduler.py``
+  for ``proposed``; small exact-op bundles for the baselines), so ONE
+  compiled program serves heterogeneous tenants — no per-tenant dispatch,
+  no recompilation per configuration;
+* the client axis is padded to the bucket's power-of-two width with
+  documented fills that provably cannot influence a real lane (pad
+  selection-uniforms 2.0 > any q; pad scores -1.0 below any real score;
+  pad gains 0.0 below any clipped channel gain, and the solve maps
+  gains=0 to q = q_floor, which can never win the guarantee-one argmax
+  over a real lane);
+* the accounting reduce is sliced/zero-padded to the tenant's real
+  ``padded_len(n)`` (``acct_len``) so its fixed-block association is the
+  engine's own;
+* the bucket's stacked queue state is DONATED to the step, so serving
+  updates Z in place — no state copies per request.
+
+Bitwise contract: with ``solver="jnp"`` a served (sel, q, P) row —
+sliced to the tenant's real N — is bitwise-equal to what
+``run_simulation_scan`` computes for that tenant's configuration on the
+same gains and selection draws, because both sides run the same
+coefficient-operand program (the operand contract,
+``repro/core/scheduler.py``). ``solver="pallas"`` routes the Theorem-2
+solve through the tiled kernel instead (``kernels/scheduler_solve``);
+kernel static parameters must then be shared by the whole bucket, rows
+are mapped sequentially (``lax.map`` — pallas calls don't batch under
+vmap), and the contract is the kernel's usual float32-round-off match,
+not bitwise.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import ChannelConfig
+from repro.core.policies import PolicyState, fence_step
+from repro.core.scheduler import (GreedyCoeffs, SchedulerConfig,
+                                  SolveCoeffs, UniformCoeffs, greedy_coeffs,
+                                  greedy_decide, selection_from_uniform,
+                                  solve_coeffs, solve_round_coeffs,
+                                  uniform_coeffs, uniform_decide,
+                                  update_queues_z)
+from repro.fl.decision import decision_step
+
+# Policies the service can serve: those whose PRNG consumption is split out
+# of the step (repro.core.policies.POLICY_DRAWS), so requests can carry the
+# raw draws and replay is deterministic. The other registry policies need
+# global normalizations over hidden per-client state (update-norm sums,
+# age forcing) that an instantaneous-CSI request cannot carry.
+SERVICE_POLICIES = ("proposed", "uniform", "greedy_channel")
+
+
+def policy_coeffs(policy: str, scfg: SchedulerConfig, ch: ChannelConfig,
+                  m_avg: float = 0.0):
+    """One tenant's policy-coefficient bundle (host numpy leaves).
+
+    Products fold in float64 exactly as a Python-float trace would bake
+    them, so coefficient-driven and config-driven steps agree bit for bit
+    (the bundles and their decision cores live in
+    ``repro.core.scheduler`` — one home for the math, engines and service
+    alike).
+    """
+    if policy == "proposed":
+        return solve_coeffs(scfg, ch)
+    if policy == "uniform":
+        return uniform_coeffs(scfg.n_clients, m_avg, ch)
+    if policy == "greedy_channel":
+        return greedy_coeffs(scfg.n_clients, m_avg, ch)
+    raise ValueError(f"policy {policy!r} is not servable "
+                     f"(servable: {SERVICE_POLICIES})")
+
+
+# --------------------------------------------------------------------------
+# Per-tenant policy cores over coefficient rows. Each mirrors the registry
+# step (repro/core/policies.py) op for op; the raws arrive with the request
+# (POLICY_DRAWS split), exactly like the client-sharded engine's recipe.
+# --------------------------------------------------------------------------
+
+def _proposed_core(guarantee_one: bool, solve_fn=None):
+    def core(u, gains, st: PolicyState, c: SolveCoeffs):
+        solve = solve_fn or (
+            lambda g, z: solve_round_coeffs(g, z, c))
+        q, p = solve(gains, st.z)
+        sel = selection_from_uniform(u, q, guarantee_one)
+        z = update_queues_z(st.z, q, p, c)
+        return sel, q, p, PolicyState(z, st.aux, st.t + 1)
+
+    return core
+
+
+def _uniform_core(guarantee_one: bool, solve_fn=None):
+    # core.scheduler.uniform_decide IS the engine's uniform math — every
+    # float op in it is individually correctly-rounded with no contraction
+    # pair, so constant-config and operand-config runs agree bit for bit
+    def core(raw, gains, st: PolicyState, c: UniformCoeffs):
+        sel, q, p = uniform_decide(raw, c)
+        return sel, q, p, PolicyState(st.z, st.aux, st.t + 1)
+
+    return core
+
+
+def _greedy_core(guarantee_one: bool, solve_fn=None):
+    def core(raw, gains, st: PolicyState, c: GreedyCoeffs):
+        sel, q, p = greedy_decide(gains, c)
+        return sel, q, p, PolicyState(st.z, st.aux, st.t + 1)
+
+    return core
+
+
+_POLICY_CORES = {
+    "proposed": _proposed_core,
+    "uniform": _uniform_core,
+    "greedy_channel": _greedy_core,
+}
+
+
+def make_bucket_step(policy: str, n_bucket: int, acct_len: int,
+                     guarantee_one: bool, solve_fn=None):
+    """Build the jitted batched serving step for one bucket shape.
+
+    Returns ``bucket_step(state, coeffs, acct, n_real, rows, gains, raw)
+    -> (sel, q, p, t_comm, power, n_sel, state')`` where
+
+    * ``state`` — the bucket's stacked :class:`PolicyState` (leaves
+      (T, n_bucket) / (T,)). DONATED: the returned state reuses its
+      buffers, so per-request serving never copies tenant queues.
+    * ``coeffs`` / ``acct`` / ``n_real`` — stacked per-tenant scalars
+      ((T,) leaves), gathered by row inside the step.
+    * ``rows`` — (B,) int32 tenant rows for this batch; pad entries point
+      one past the end (T), where the gather clamps (garbage compute,
+      masked out) and the scatter drops (state untouched) — pad lanes can
+      never alter a real tenant's bits.
+    * ``gains`` (B, n_bucket) and ``raw`` (stacked policy raws) — padded
+      request payloads.
+
+    One compiled program per (bucket, B) shape; batch sizes are padded to
+    powers of two by the batcher, so the number of compilations stays
+    logarithmic in the peak batch size.
+    """
+    core = _POLICY_CORES[policy](guarantee_one, solve_fn)
+
+    def one(raw_r, gains_r, st_r, c_r, a_r, nr):
+        valid = jnp.arange(n_bucket, dtype=jnp.int32) < nr
+        step = fence_step(lambda k, g, s: core(k, g, s, c_r))
+        return decision_step(step, a_r, raw_r, gains_r, st_r,
+                             valid=valid, acct_len=acct_len)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def bucket_step(state, coeffs, acct, n_real, rows, gains, raw):
+        st_rows = jax.tree.map(lambda a: a[rows], state)
+        c_rows = jax.tree.map(lambda a: a[rows], coeffs)
+        a_rows = jax.tree.map(lambda a: a[rows], acct)
+        nr_rows = n_real[rows]
+        if solve_fn is None:
+            sel, q, p, t_comm, power, n_sel, st_new = jax.vmap(one)(
+                raw, gains, st_rows, c_rows, a_rows, nr_rows)
+        else:
+            # pallas_call does not batch under vmap; map rows sequentially
+            sel, q, p, t_comm, power, n_sel, st_new = jax.lax.map(
+                lambda args: one(*args),
+                (raw, gains, st_rows, c_rows, a_rows, nr_rows))
+        new_state = jax.tree.map(
+            lambda buf, upd: buf.at[rows].set(upd, mode="drop"),
+            state, st_new)
+        return sel, q, p, t_comm, power, n_sel, new_state
+
+    return bucket_step

@@ -7,10 +7,16 @@ The contract (mirroring the grid's and the participant-sharded round's):
   shard_map (same traced draw as the sequential step), every elementwise
   stage is the same fenced code, and selections/packs/merges are value
   selections, not arithmetic.
-* any mesh — the accounting island (comm_time / avg_power / n_selected)
-  stays EXACTLY equal: its reductions always associate as the fixed
-  ACCOUNT_BLOCKS blocks (repro/fl/sharding.py), so every mesh adds the
-  same partials in the same order.
+* any mesh — the accounting island keeps n_selected exactly equal for
+  the suite's fixed seeds (selections, not arithmetic — though a draw
+  landing inside the ~1 ulp cross-mesh q drift could in principle flip
+  one, see fl/sharding.py) and comm_time / avg_power equal to ~1 ulp:
+  the reductions always associate as the fixed ACCOUNT_BLOCKS blocks
+  (repro/fl/sharding.py), so every mesh adds the same partials in the
+  same order; the residual is per-lane emission drift of the
+  operand-driven solve (LLVM inlines/contracts per kernel shape), the
+  price of the scheduler service's bitwise contract
+  (repro/core/scheduler.py).
 * across meshes — trained metrics (test_acc) may drift by reduction
   re-association in the surrounding program (~1 ulp/round, amplified
   through training), bounded here by the same tolerance the
@@ -19,8 +25,9 @@ The contract (mirroring the grid's and the participant-sharded round's):
 Run under scripts/test.sh the suite sees 8 virtual CPU devices; under bare
 pytest there is 1 — the multi-device legs key off len(jax.devices()).
 
-The ``massive`` marker leg re-checks the scheduling-only runner's exact
-accounting at N = 10^5 (nightly CI only; see .github/workflows/ci.yml).
+The ``massive`` marker leg re-checks the scheduling-only runner's
+accounting contract at N = 10^5 (nightly CI only; see
+.github/workflows/ci.yml).
 """
 
 import dataclasses
@@ -40,7 +47,19 @@ from repro.models.registry import make_model
 
 N = 48
 HIST_KEYS = ("round", "comm_time", "test_acc", "avg_power", "n_selected")
-ACCOUNT_KEYS = ("round", "comm_time", "avg_power", "n_selected")
+EXACT_ACCOUNT_KEYS = ("round", "n_selected")
+FLOAT_ACCOUNT_KEYS = ("comm_time", "avg_power")
+
+
+def _assert_accounting(seq, shd, n_dev):
+    """Cross-mesh accounting: integers exact, floats to ~1 ulp (same
+    blocked association; emission-level drift only)."""
+    for k in EXACT_ACCOUNT_KEYS:
+        np.testing.assert_array_equal(seq[k], shd[k],
+                                      err_msg=f"mesh{n_dev} {k}")
+    for k in FLOAT_ACCOUNT_KEYS:
+        np.testing.assert_allclose(seq[k], shd[k], rtol=3e-7, atol=0,
+                                   err_msg=f"mesh{n_dev} {k}")
 
 
 @pytest.fixture(scope="module")
@@ -96,9 +115,7 @@ def test_mesh1_bitwise_and_meshN_accounting(setup, policy, uniform_m,
     seq, sh1, shd, n_dev = _run_three(ds, scfg, ch, sig, sim, params)
     for k in HIST_KEYS:
         np.testing.assert_array_equal(seq[k], sh1[k], err_msg=f"mesh1 {k}")
-    for k in ACCOUNT_KEYS:
-        np.testing.assert_array_equal(seq[k], shd[k],
-                                      err_msg=f"mesh{n_dev} {k}")
+    _assert_accounting(seq, shd, n_dev)
     np.testing.assert_allclose(seq["test_acc"], shd["test_acc"], atol=2e-2,
                                err_msg=f"mesh{n_dev} test_acc")
 
@@ -118,9 +135,7 @@ def test_odd_n_pads_with_dead_lanes(setup):
     seq, sh1, shd, n_dev = _run_three(ds, scfg, ch, sig, sim, params)
     for k in HIST_KEYS:
         np.testing.assert_array_equal(seq[k], sh1[k], err_msg=f"mesh1 {k}")
-    for k in ACCOUNT_KEYS:
-        np.testing.assert_array_equal(seq[k], shd[k],
-                                      err_msg=f"mesh{n_dev} {k}")
+    _assert_accounting(seq, shd, n_dev)
     assert np.all(np.isfinite(shd["comm_time"]))
     assert np.all(shd["n_selected"] <= n)
 
@@ -154,8 +169,8 @@ def test_pallas_solver_on_the_sharded_path(setup):
 
 def test_schedule_runner_sequential_vs_sharded_exact(setup):
     """The scheduling-only massive-N driver: sequential (client_shards=0)
-    and full-mesh trajectories must agree EXACTLY on the accounting
-    island — same draws, same blocked reduce, any mesh."""
+    and full-mesh trajectories share draws and the blocked reduce —
+    n_selected exact, float accounting to ~1 ulp on any mesh."""
     n = 2400
     ch = ChannelConfig(n_clients=n)
     scfg = SchedulerConfig(n_clients=n, model_bits=32 * 555178.0)
@@ -168,9 +183,13 @@ def test_schedule_runner_sequential_vs_sharded_exact(setup):
         shd = make_schedule_runner(sig, scfg, ch, rounds=8, policy=policy,
                                    m_avg=m_avg,
                                    client_shards=n_dev)(key)
-        for name, a, b in zip(("t_comm", "power", "n_sel"), seq, shd):
-            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
-                                          err_msg=f"{policy}/{name}")
+        np.testing.assert_array_equal(np.asarray(seq[2]),
+                                      np.asarray(shd[2]),
+                                      err_msg=f"{policy}/n_sel")
+        for name, a, b in zip(("t_comm", "power"), seq, shd):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=3e-7, atol=0,
+                                       err_msg=f"{policy}/{name}")
 
 
 @pytest.mark.massive
@@ -186,9 +205,11 @@ def test_schedule_runner_parity_massive(setup):
                                client_shards=0)(key)
     shd = make_schedule_runner(sig, scfg, ch, rounds=6, policy="proposed",
                                client_shards=n_dev)(key)
-    for name, a, b in zip(("t_comm", "power", "n_sel"), seq, shd):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
-                                      err_msg=name)
+    np.testing.assert_array_equal(np.asarray(seq[2]), np.asarray(shd[2]),
+                                  err_msg="n_sel")
+    for name, a, b in zip(("t_comm", "power"), seq, shd):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-7, atol=0, err_msg=name)
     assert np.all(np.asarray(seq[2]) >= 1)
 
 

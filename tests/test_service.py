@@ -1,0 +1,404 @@
+"""Multi-tenant scheduler service: the bitwise-parity contract + hygiene.
+
+The binding contract (repro/service): for a single tenant fed the gains
+stream that ``run_simulation_scan`` would draw, the served per-round
+decisions (sel, q, P) and accounting (t_comm, power, n_sel) are
+BITWISE-equal to the engine's — the service is the engine's scheduling
+layer (``repro/fl/decision.py``) refactored for online use. That rests on
+the operand contract (repro/core/scheduler.py): both sides run the
+coefficient bundle through a jit boundary as runtime operands, which is
+bit-stable across array shapes, bucket padding, and vmap batching.
+
+Also pinned here: bucket-padding hygiene (pad lanes and co-tenants never
+alter a tenant's bits), donation safety + snapshot/restore mid-stream,
+and bit-exact replay of a logged multi-tenant session (including through
+the npz save/load round trip).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ChannelConfig, SchedulerConfig, heterogeneous_sigmas,
+                        init_policy_state, make_channel, make_policy)
+from repro.core.policies import POLICY_DRAWS
+from repro.fl.decision import channel_obs, decision_coeffs, decision_step
+from repro.fl.engine import (CHANNEL_INIT_TAG, SimConfig, eval_rounds,
+                             run_simulation_scan)
+from repro.service import SchedulerService
+
+N = 40
+ROUNDS = 13
+EVAL_EVERY = 5
+
+
+def _configs(n=N, **kw):
+    scfg = SchedulerConfig(n_clients=n, model_bits=32 * 50000.0,
+                           **{k: v for k, v in kw.items()
+                              if k in ("lam", "V", "q_floor")})
+    ch = ChannelConfig(n_clients=n,
+                       **{k: v for k, v in kw.items()
+                          if k in ("p_max", "p_bar", "noise_power")})
+    return scfg, ch
+
+
+def _engine_stream(key, scfg, ch, sigmas, rounds, policy="proposed"):
+    """The (gains, raw) stream run_simulation_scan would consume, plus the
+    reference decision trajectory, computed by the SAME operand-driven
+    decision layer the engine scans (repro/fl/decision.py)."""
+    n = scfg.n_clients
+    channel = make_channel("rayleigh", sigmas, ch)
+    co_host = decision_coeffs(scfg, ch)
+
+    @jax.jit
+    def ref_round(pol_state, ch_state, k, co):
+        step = make_policy(policy, scfg, ch, m_avg=5.0, coeffs=co.solve)
+        k_ch, k_sel, _ = jax.random.split(k, 3)
+        gains, ch_state = channel_obs(channel.step, k_ch, ch_state)
+        sel, q, p, t_comm, power, n_sel, pol_state = decision_step(
+            step, co.acct, k_sel, gains, pol_state)
+        return (gains, sel, q, p, t_comm, power, n_sel, pol_state,
+                ch_state)
+
+    pol = init_policy_state(policy, n)
+    cst = channel.init(jax.random.fold_in(key, CHANNEL_INIT_TAG))
+    out = []
+    for _ in range(rounds):
+        key, k = jax.random.split(key)
+        _, k_sel, _ = jax.random.split(k, 3)
+        gains, sel, q, p, t_comm, power, n_sel, pol, cst = ref_round(
+            pol, cst, k, co_host)
+        raw = POLICY_DRAWS[policy](k_sel, n)
+        out.append(dict(gains=np.asarray(gains), raw=raw,
+                        sel=np.asarray(sel), q=np.asarray(q),
+                        p=np.asarray(p), t_comm=np.asarray(t_comm),
+                        power=np.asarray(power), n_sel=int(n_sel)))
+    return out
+
+
+def _drive_service(svc, name, stream):
+    decisions = []
+    for r in stream:
+        svc.submit(name, r["gains"], raw=r["raw"])
+        decisions.append(svc.flush()[name])
+    return decisions
+
+
+def _assert_decisions_equal(got, want, msg=""):
+    np.testing.assert_array_equal(got.sel, want["sel"], err_msg=f"sel {msg}")
+    np.testing.assert_array_equal(got.q, want["q"], err_msg=f"q {msg}")
+    np.testing.assert_array_equal(got.p, want["p"], err_msg=f"p {msg}")
+    np.testing.assert_array_equal(got.t_comm, want["t_comm"],
+                                  err_msg=f"t_comm {msg}")
+    np.testing.assert_array_equal(got.power, want["power"],
+                                  err_msg=f"power {msg}")
+    assert int(got.n_sel) == want["n_sel"], f"n_sel {msg}"
+
+
+# --------------------------------------------------------------------------
+# The binding contract: single tenant == run_simulation_scan, bitwise.
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["proposed", "uniform", "greedy_channel"])
+def test_single_tenant_decisions_bitwise_vs_engine(policy):
+    scfg, ch = _configs()
+    sig = heterogeneous_sigmas(N)
+    key = jax.random.PRNGKey(2)
+    stream = _engine_stream(key, scfg, ch, sig, ROUNDS, policy=policy)
+
+    svc = SchedulerService()
+    svc.add_tenant("t0", scfg, ch, policy=policy,
+                   m_avg=0.0 if policy == "proposed" else 5.0)
+    decisions = _drive_service(svc, "t0", stream)
+    for r, (got, want) in enumerate(zip(decisions, stream)):
+        _assert_decisions_equal(got, want, msg=f"round {r} ({policy})")
+
+
+def test_single_tenant_accounting_bitwise_vs_scan_history():
+    """The served accounting, f32-accumulated exactly as the scan carry
+    accumulates it, reproduces run_simulation_scan's history bit for bit
+    — the service IS the engine's scheduling layer."""
+    from repro.data.synthetic import make_cifar10_like
+    from repro.models.registry import make_model
+
+    scfg, ch = _configs()
+    sig = heterogeneous_sigmas(N)
+    ds = make_cifar10_like(jax.random.PRNGKey(0), n_clients=N,
+                           per_client=32, n_test=128, h=8, w=8)
+    params = make_model("mlp", ds).init_fn(jax.random.PRNGKey(1))
+    sim = SimConfig(rounds=ROUNDS, eval_every=EVAL_EVERY, m_cap=5, batch=4,
+                    local_steps=1, eval_size=128, model="mlp")
+    key = jax.random.PRNGKey(2)
+    hist = run_simulation_scan(key, params, ds, sim, scfg, ch, sig)
+
+    stream = _engine_stream(key, scfg, ch, sig, ROUNDS)
+    svc = SchedulerService()
+    svc.add_tenant("t0", scfg, ch)
+    decisions = _drive_service(svc, "t0", stream)
+
+    # f32 running sums, exactly as the scan carry adds them
+    t_cum = np.float32(0.0)
+    p_cum = np.float32(0.0)
+    comm, pcum, nsel = [], [], []
+    for d in decisions:
+        t_cum = np.float32(t_cum + d.t_comm)
+        p_cum = np.float32(p_cum + d.power)
+        comm.append(t_cum)
+        pcum.append(p_cum)
+        nsel.append(int(d.n_sel))
+    ev = eval_rounds(ROUNDS, EVAL_EVERY)
+    np.testing.assert_array_equal(
+        hist["comm_time"], np.asarray([comm[r] for r in ev], np.float64))
+    np.testing.assert_array_equal(
+        hist["n_selected"], np.asarray([nsel[r] for r in ev]))
+    want_avg = (np.asarray([pcum[r] for r in ev]).astype(np.float64)
+                / (np.asarray(ev) + 1) / N)
+    np.testing.assert_array_equal(hist["avg_power"], want_avg)
+
+
+# --------------------------------------------------------------------------
+# Bucket padding hygiene: co-tenants and pad lanes never alter bits.
+# --------------------------------------------------------------------------
+
+def test_bucket_mix_never_alters_a_tenants_bits():
+    """One tenant served alone vs served inside a full multi-tenant,
+    multi-bucket stream (odd Ns, shared buckets, mixed policies):
+    identical bits round for round."""
+    scfg, ch = _configs()
+    sig = heterogeneous_sigmas(N)
+    stream = _engine_stream(jax.random.PRNGKey(2), scfg, ch, sig, 6)
+
+    svc_solo = SchedulerService()
+    svc_solo.add_tenant("t0", scfg, ch)
+    solo = _drive_service(svc_solo, "t0", stream)
+
+    svc_mix = SchedulerService()
+    svc_mix.add_tenant("t0", scfg, ch)
+    others = []
+    rng = np.random.default_rng(0)
+    for i, (n_o, policy, m_avg) in enumerate(
+            [(40, "proposed", 0.0),      # same bucket as t0
+             (63, "proposed", 0.0),      # same bucket, different N
+             (21, "uniform", 4.0),       # other policy bucket
+             (97, "greedy_channel", 3.0),
+             (7, "proposed", 0.0)]):
+        nm = f"o{i}"
+        s_o = SchedulerConfig(n_clients=n_o,
+                              model_bits=float(rng.uniform(1e5, 1e7)),
+                              lam=float(rng.uniform(0.5, 30)),
+                              V=float(rng.uniform(10, 1e4)))
+        c_o = ChannelConfig(n_clients=n_o,
+                            p_max=float(rng.uniform(20, 150)))
+        svc_mix.add_tenant(nm, s_o, c_o, policy=policy, m_avg=m_avg)
+        others.append((nm, s_o, c_o, policy))
+    mixed = []
+    for r, entry in enumerate(stream):
+        svc_mix.submit("t0", entry["gains"], raw=entry["raw"])
+        for j, (nm, s_o, c_o, policy) in enumerate(others):
+            k = jax.random.fold_in(jax.random.PRNGKey(77), r * 31 + j)
+            gains = np.abs(np.asarray(
+                jax.random.normal(k, (s_o.n_clients,)))) + 0.01
+            svc_mix.submit(nm, gains, key=jax.random.fold_in(k, 5))
+        mixed.append(svc_mix.flush()["t0"])
+    for r, (a, b) in enumerate(zip(solo, mixed)):
+        np.testing.assert_array_equal(a.sel, b.sel, err_msg=f"round {r}")
+        np.testing.assert_array_equal(a.q, b.q, err_msg=f"round {r}")
+        np.testing.assert_array_equal(a.p, b.p, err_msg=f"round {r}")
+        np.testing.assert_array_equal(a.t_comm, b.t_comm,
+                                      err_msg=f"round {r}")
+        np.testing.assert_array_equal(a.power, b.power,
+                                      err_msg=f"round {r}")
+
+
+def test_pad_rows_and_lanes_stay_finite_and_dead():
+    """Sentinel batch rows and pad lanes must neither leak NaN/inf into
+    responses nor ever mark a pad lane selected."""
+    scfg, ch = _configs(n=21)   # odd N: 11 pad lanes in a 32-wide bucket
+    svc = SchedulerService()
+    svc.add_tenant("odd", scfg, ch)
+    key = jax.random.PRNGKey(3)
+    for r in range(4):
+        k = jax.random.fold_in(key, r)
+        gains = np.abs(np.asarray(jax.random.normal(k, (21,)))) + 0.01
+        svc.submit("odd", gains, key=jax.random.fold_in(k, 9))
+        d = svc.flush()["odd"]
+        assert d.sel.shape == (21,) and d.q.shape == (21,)
+        assert np.all(np.isfinite(d.q)) and np.all(np.isfinite(d.p))
+        assert np.isfinite(d.t_comm) and np.isfinite(d.power)
+        assert 1 <= int(d.n_sel) <= 21
+    st = svc.tenant_state("odd")
+    assert st.z.shape == (21,) and np.all(np.isfinite(st.z))
+    assert int(st.t) == 4
+
+
+# --------------------------------------------------------------------------
+# Donation safety, snapshot/restore mid-stream, bit-exact replay.
+# --------------------------------------------------------------------------
+
+def _two_tenant_service():
+    svc = SchedulerService()
+    scfg, ch = _configs()
+    svc.add_tenant("a", scfg, ch)
+    svc.add_tenant("b", SchedulerConfig(n_clients=70, model_bits=1e6,
+                                        lam=2.0, V=300.0),
+                   ChannelConfig(n_clients=70, p_max=60.0),
+                   policy="uniform", m_avg=6.0)
+    return svc
+
+
+def _random_flushes(svc, n_flushes, seed=11):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for r in range(n_flushes):
+        for i, (nm, n) in enumerate([("a", N), ("b", 70)]):
+            k = jax.random.fold_in(jax.random.fold_in(key, r), i)
+            gains = np.abs(np.asarray(jax.random.normal(k, (n,)))) + 0.01
+            svc.submit(nm, gains, key=jax.random.fold_in(k, 1))
+        out.append(svc.flush())
+    return out
+
+
+def test_donation_snapshot_restore_replay_bitexact(tmp_path):
+    """Stepping twice from a snapshot equals replay: donated buffers never
+    corrupt semantics, and a restored service reproduces the logged
+    session bit for bit — including through the npz file round trips."""
+    svc = _two_tenant_service()
+    _random_flushes(svc, 2, seed=5)          # pre-roll: non-trivial queues
+    svc.save(str(tmp_path / "state.npz"))    # snapshot mid-stream
+    mark = len(svc.log)
+    live = _random_flushes(svc, 3, seed=6)   # serve on (donating state)
+    svc.log.save(str(tmp_path / "log.npz"))
+
+    from repro.service import RequestLog
+    structures = {n: svc.raw_structure(n) for n in ("a", "b")}
+    log = RequestLog.load(str(tmp_path / "log.npz"), structures)
+    assert len(log) == len(svc.log) and log.n_requests == svc.log.n_requests
+
+    svc2 = _two_tenant_service()
+    svc2.load(str(tmp_path / "state.npz"))   # restore the snapshot
+    replay_log = RequestLog()
+    replay_log.flushes = log.flushes[mark:]  # the post-snapshot session
+    replayed = replay_log.replay(svc2)
+    assert len(replayed) == len(live)
+    for r, (a, b) in enumerate(zip(live, replayed)):
+        assert set(a) == set(b)
+        for nm in a:
+            np.testing.assert_array_equal(a[nm].sel, b[nm].sel,
+                                          err_msg=f"flush {r} {nm}")
+            np.testing.assert_array_equal(a[nm].q, b[nm].q,
+                                          err_msg=f"flush {r} {nm}")
+            np.testing.assert_array_equal(a[nm].p, b[nm].p,
+                                          err_msg=f"flush {r} {nm}")
+            np.testing.assert_array_equal(a[nm].t_comm, b[nm].t_comm)
+            np.testing.assert_array_equal(a[nm].power, b[nm].power)
+    # final queue state identical too
+    for nm in ("a", "b"):
+        s1, s2 = svc.tenant_state(nm), svc2.tenant_state(nm)
+        np.testing.assert_array_equal(s1.z, s2.z, err_msg=nm)
+        np.testing.assert_array_equal(s1.aux, s2.aux, err_msg=nm)
+        assert int(s1.t) == int(s2.t)
+
+
+def test_same_tenant_twice_in_one_flush_serves_in_order():
+    """k submissions in one flush = k waves in submission order — state
+    advances identically to k single-request flushes."""
+    scfg, ch = _configs()
+    sig = heterogeneous_sigmas(N)
+    stream = _engine_stream(jax.random.PRNGKey(4), scfg, ch, sig, 4)
+
+    svc_one = SchedulerService()
+    svc_one.add_tenant("t", scfg, ch)
+    for r in stream:
+        svc_one.submit("t", r["gains"], raw=r["raw"])
+    last = svc_one.flush()["t"]              # 4 waves inside one flush
+
+    svc_seq = SchedulerService()
+    svc_seq.add_tenant("t", scfg, ch)
+    seq = _drive_service(svc_seq, "t", stream)
+    np.testing.assert_array_equal(last.q, seq[-1].q)
+    np.testing.assert_array_equal(last.sel, seq[-1].sel)
+    for nm, s1, s2 in [("t", svc_one.tenant_state("t"),
+                        svc_seq.tenant_state("t"))]:
+        np.testing.assert_array_equal(s1.z, s2.z, err_msg=nm)
+        assert int(s1.t) == int(s2.t) == 4
+
+
+# --------------------------------------------------------------------------
+# Validation + the pallas solve switch.
+# --------------------------------------------------------------------------
+
+def test_validation_errors():
+    svc = SchedulerService()
+    scfg, ch = _configs()
+    svc.add_tenant("t", scfg, ch)
+    with pytest.raises(ValueError, match="already registered"):
+        svc.add_tenant("t", scfg, ch)
+    with pytest.raises(ValueError, match="not servable"):
+        svc.add_tenant("ua", scfg, ch, policy="update_aware", m_avg=3.0)
+    with pytest.raises(ValueError, match="m_avg > 0"):
+        svc.add_tenant("u", scfg, ch, policy="uniform")
+    with pytest.raises(KeyError):
+        svc.submit("ghost", np.ones(N, np.float32),
+                   key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="shape"):
+        svc.submit("t", np.ones(N + 1, np.float32),
+                   key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="exactly one"):
+        svc.submit("t", np.ones(N, np.float32))
+    with pytest.raises(ValueError, match="unknown solver"):
+        SchedulerService(solver="magma")
+    # non-positive gains would tie greedy's sort threshold with the 0.0
+    # pad fill (pad lanes selected) — rejected up front
+    bad = np.ones(N, np.float32)
+    bad[3] = 0.0
+    with pytest.raises(ValueError, match="positive"):
+        svc.submit("t", bad, key=jax.random.PRNGKey(0))
+    # greedy with m > N cannot even build in the engine (sort[m-1] is out
+    # of range); with bucket padding it would select pad lanes instead
+    with pytest.raises(ValueError, match="m_avg"):
+        svc.add_tenant("g", *_configs(), policy="greedy_channel",
+                       m_avg=N + 1.0)
+
+
+def test_failed_flush_logs_nothing():
+    """A flush that raises must not be recorded in the replay log (the
+    log must contain exactly the served requests, or replay diverges)."""
+    scfg, ch = _configs(n=64)
+    svc = SchedulerService(solver="pallas")
+    svc.add_tenant("x", scfg, ch)
+    svc.add_tenant("y", dataclasses.replace(scfg, V=17.0), ch)
+    gains = np.ones(64, np.float32)
+    svc.submit("x", gains, key=jax.random.PRNGKey(0))
+    svc.submit("y", gains, key=jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="homogeneous"):
+        svc.flush()
+    assert len(svc.log) == 0 and svc.log.n_requests == 0
+
+
+def test_pallas_solver_bucket():
+    """solver='pallas' serves a configuration-homogeneous bucket through
+    the tiled kernel (interpret off-TPU) — matching the jnp service to the
+    kernel's float32 round-off — and rejects heterogeneous buckets."""
+    scfg, ch = _configs(n=64)
+    gains = np.abs(np.asarray(
+        jax.random.normal(jax.random.PRNGKey(0), (64,)))) + 0.05
+    key = jax.random.PRNGKey(1)
+
+    svc_j = SchedulerService(solver="jnp")
+    svc_p = SchedulerService(solver="pallas")
+    for svc in (svc_j, svc_p):
+        svc.add_tenant("t", scfg, ch)
+        svc.submit("t", gains, key=key)
+    dj, dp = svc_j.flush()["t"], svc_p.flush()["t"]
+    np.testing.assert_allclose(dp.q, dj.q, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(dp.p, dj.p, rtol=1e-5, atol=1e-3)
+
+    svc_bad = SchedulerService(solver="pallas")
+    svc_bad.add_tenant("x", scfg, ch)
+    svc_bad.add_tenant("y", dataclasses.replace(scfg, V=17.0), ch)
+    svc_bad.submit("x", gains, key=key)
+    with pytest.raises(ValueError, match="homogeneous"):
+        svc_bad.flush()

@@ -122,6 +122,49 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
         load_pytree(path, {"a": jnp.zeros((3, 2))})
 
 
+def test_checkpoint_dtype_contract_bf16_int32_namedtuple(tmp_path):
+    """The restore dtype contract: bf16 leaves are stored widened to f32
+    (npz has no bf16) and must come back AS BF16 — cast to the template
+    leaf dtype — with int32 and nested-NamedTuple leaves intact, and the
+    bf16 payload bit-preserved through the f32 widening."""
+    from typing import NamedTuple
+
+    class Inner(NamedTuple):
+        z: jax.Array
+        t: jax.Array
+
+    class Outer(NamedTuple):
+        w: jax.Array
+        inner: Inner
+
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(5, 3)).astype(np.float32)
+                    ).astype(jnp.bfloat16)
+    tree = {"outer": Outer(w=w,
+                           inner=Inner(z=jnp.asarray([1.5, -2.25, 0.0],
+                                                     jnp.bfloat16),
+                                       t=jnp.arange(4, dtype=jnp.int32)))}
+    path = os.path.join(tmp_path, "bf16.npz")
+    save_pytree(path, tree)
+    restored = load_pytree(path, tree)
+    assert restored["outer"].w.dtype == jnp.bfloat16
+    assert restored["outer"].inner.z.dtype == jnp.bfloat16
+    assert restored["outer"].inner.t.dtype == jnp.int32
+    # bf16 -> f32 is exact, so the round trip must be BITWISE
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # data-free templates (shape/dtype only) restore identically — the
+    # scheduler service's stateless-restore path
+    sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                       tree)
+    restored2 = load_pytree(path, sds)
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(restored2)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
 # ----------------------------------------------------------------- sharding
 
 def test_param_pspecs_cover_all_leaves():
