@@ -429,6 +429,73 @@ def bench_grid(prof):
     return {"speedup": speedup, "devices": n_dev}
 
 
+# --------------------------------------------------------------- tournament
+
+def bench_tournament(prof):
+    """Policy tournament over adversarial scenarios: churn x outage x
+    straggler x policy x seed in ONE compiled ``run_grid`` call, scored as
+    regret-vs-oracle and time-to-accuracy (repro/fl/tournament.py).
+
+    Timing is steady-state for the compiled grid call (warmed), with the
+    host-side scoring included — scoring is part of what a tournament run
+    costs. JSON artifact: benchmarks/out/tournament.json (full metric
+    arrays + leaderboard).
+    """
+    import jax
+    from repro.core import ChannelConfig, SchedulerConfig
+    from repro.data.synthetic import make_cifar10_like
+    from repro.fl.engine import SimConfig
+    from repro.fl.tournament import run_tournament
+    from repro.models.registry import make_model
+
+    n = 64
+    ds = make_cifar10_like(jax.random.PRNGKey(0), n_clients=n,
+                           per_client=16, n_test=128, h=8, w=8)
+    model_params = (("conv1", 4), ("conv2", 8), ("hidden", 16))
+    params = make_model("cnn", ds,
+                        **dict(model_params)).init_fn(jax.random.PRNGKey(1))
+    ch = ChannelConfig(n_clients=n)
+    scfg = SchedulerConfig(n_clients=n, model_bits=32 * 5000.0)
+    rounds = max(5, min(20, prof.rounds // 4))
+    sim = SimConfig(rounds=rounds, eval_every=5, m_cap=2, batch=4,
+                    local_steps=1, eval_size=128, uniform_m=4.0,
+                    model="cnn", model_params=model_params)
+    kw = dict(
+        channels=("rayleigh",
+                  ("outage_burst", (("outage_p", 0.2), ("burst_len", 4.0)))),
+        populations=((),
+                     (("p_leave", 0.1), ("p_join", 0.2)),
+                     (("p_fail", 0.25),)),
+        policies=("proposed", "uniform", "greedy_channel"),
+        seeds=tuple(range(2)),
+    )
+    key = jax.random.PRNGKey(7)
+    n_dev = len(jax.devices())
+
+    def drive():
+        return run_tournament(key, params, ds, sim, scfg, ch, **kw)
+
+    drive()   # warm the compiled grid call
+    t0 = time.time()
+    t = drive()
+    wall = time.time() - t0
+    n_cfg = (len(kw["channels"]) * len(kw["populations"])
+             * len(kw["policies"]) * len(kw["seeds"]))
+    cps = n_cfg / wall
+    best = t["leaderboard"][0]
+    _emit("tournament", 1e6 / cps,
+          f"configs_per_sec={cps:.2f};configs={n_cfg};devices={n_dev};"
+          f"best={best['policy']};best_regret_acc="
+          f"{best['mean_regret_acc']:.4f}")
+    _dump("tournament", {k: t[k] for k in
+                         ("round", "comm_time", "test_acc", "avg_power",
+                          "n_selected", "channels", "populations",
+                          "sigma_dists", "policies", "seeds", "final_acc",
+                          "regret_acc", "time_to_acc", "regret_tta",
+                          "acc_target_frac", "metric_axes", "leaderboard")})
+    return {"configs_per_sec": cps, "leaderboard": t["leaderboard"]}
+
+
 # -------------------------------------------------------------------- round
 
 def bench_round(prof):
@@ -694,6 +761,7 @@ def bench_kernels(prof):
 BENCHES = {
     "engine": bench_engine,
     "grid": bench_grid,
+    "tournament": bench_tournament,
     "round": bench_round,
     "massive": bench_massive,
     "service": bench_service,

@@ -1,0 +1,105 @@
+"""Policy tournament under adversarial wireless scenarios, in one call.
+
+The paper's Algorithm 2 is derived for a fixed fleet with i.i.d. block
+fading and reliable delivery. This demo stresses the whole policy registry
+where those assumptions break — device churn, correlated outage bursts,
+post-selection straggler failures — and scores every policy against the
+per-scenario oracle (regret) and on time-to-accuracy. The full
+channel x population x policy x seed cross product runs as ONE compiled
+``run_grid`` call (repro/fl/tournament.py).
+
+Reading the table: the regret metric is ACCURACY regret at this short
+horizon, which favors the M-matched uniform baseline — its q = M/N
+importance weights make every round a full-mass average step, while
+Algorithm 2 spends its selection budget minimizing comm time/energy (the
+axis the paper optimizes; see examples/quickstart.py for the comm-time
+comparison at matched accuracy). The p_fail scenarios hit every policy
+hard and they should: the server cannot observe the failure rate, so the
+1/q weights under-count the delivered mass by (1 - p_fail) per round
+(docs/paper_map.md, scenario section).
+
+On CPU, force 8 virtual devices first (the scripts/test.sh idiom):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/tournament.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import ChannelConfig, SchedulerConfig, heterogeneous_sigmas
+from repro.data.synthetic import make_cifar10_like
+from repro.fl import SimConfig, match_uniform_m, run_tournament
+from repro.models.registry import make_model
+
+N = 64          # clients (tiny so the demo stays ~a minute on CPU)
+ROUNDS = 40
+
+
+def main():
+    print(f"devices: {jax.device_count()}")
+    key = jax.random.PRNGKey(0)
+    ds = make_cifar10_like(key, n_clients=N, per_client=64, n_test=512,
+                           h=16, w=16)
+    params = make_model("cnn", ds, conv1=8, conv2=16,
+                        hidden=64).init_fn(jax.random.PRNGKey(1))
+    ch = ChannelConfig(n_clients=N)
+    scfg = SchedulerConfig(n_clients=N, model_bits=32 * 50000.0, lam=10.0)
+
+    # matched average participation for the baselines (see scenario_grid.py
+    # for why one M is shared by every cell)
+    m = match_uniform_m(jax.random.PRNGKey(2), heterogeneous_sigmas(N),
+                        scfg, ch)
+    print(f"matched M = {m:.2f}")
+
+    sim = SimConfig(rounds=ROUNDS, eval_every=10, m_cap=16, batch=16,
+                    local_steps=5, eval_size=512, uniform_m=m)
+
+    scenarios = dict(
+        # benign fading AND bursty outages (Gilbert-Elliott: ~20% of rounds
+        # inside a deep fade that lasts ~4 rounds)
+        channels=("rayleigh",
+                  ("outage_burst", (("outage_p", 0.2), ("burst_len", 4.0)))),
+        # all-active | churning fleet | 25% straggler failures
+        populations=((),
+                     (("p_leave", 0.1), ("p_join", 0.2)),
+                     (("p_fail", 0.25),)),
+        policies=("proposed", "uniform", "greedy_channel"),
+        seeds=(0, 1, 2),
+    )
+
+    t0 = time.time()
+    t = run_tournament(jax.random.PRNGKey(3), params, ds, sim, scfg, ch,
+                       **scenarios)
+    wall = time.time() - t0
+    n_cfg = t["regret_acc"].size
+    print(f"{n_cfg} configs x {ROUNDS} rounds in {wall:.1f}s "
+          f"on {t['n_devices']} devices\n")
+
+    pop_names = ["all-active" if not p else
+                 ",".join(f"{k}={v:g}" for k, v in p.items())
+                 for p in t["populations"]]
+    print(f"{'channel':>13} {'population':>22} {'policy':>15} "
+          f"{'acc':>6} {'regret':>7} {'tta_s':>8}")
+    for ci, cname in enumerate(t["channels"]):
+        for gi, gname in enumerate(pop_names):
+            for pi, pname in enumerate(t["policies"]):
+                acc = t["final_acc"][ci, gi, 0, pi].mean()
+                reg = t["regret_acc"][ci, gi, 0, pi].mean()
+                tta = t["time_to_acc"][ci, gi, 0, pi]
+                tta = tta[np.isfinite(tta)]
+                tta_s = f"{tta.mean():8.2f}" if tta.size else "   never"
+                print(f"{cname:>13} {gname:>22} {pname:>15} "
+                      f"{acc:6.3f} {reg:7.4f} {tta_s}")
+
+    print("\nleaderboard (mean over every scenario x seed):")
+    for row in t["leaderboard"]:
+        print(f"  {row['policy']:>15}  regret_acc={row['mean_regret_acc']:.4f}"
+              f"  oracle_wins={row['oracle_wins']}"
+              f"  unreached={row['unreached']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,7 @@ from repro.core.channel import (CHANNEL_IDS, CHANNEL_MODELS, SIGMA_DISTS,
                                 channel_state_zero, draw_gains,
                                 expected_uplink_time, heterogeneous_sigmas,
                                 homogeneous_sigmas, make_channel,
-                                resolve_sigmas, uplink_time)
+                                mobility_rho, resolve_sigmas, uplink_time)
 from repro.core.lambertw import lambertw0
 from repro.core.policies import (POLICIES, POLICY_IDS, PolicyState,
                                  greedy_channel, init_policy_state,
@@ -25,7 +25,7 @@ __all__ = [
     "CHANNEL_IDS", "CHANNEL_MODELS", "SIGMA_DISTS", "ChannelConfig",
     "ChannelModel", "channel_rate", "channel_state_zero", "draw_gains",
     "expected_uplink_time", "heterogeneous_sigmas", "homogeneous_sigmas",
-    "make_channel", "resolve_sigmas", "uplink_time",
+    "make_channel", "mobility_rho", "resolve_sigmas", "uplink_time",
     "lambertw0",
     "POLICIES", "POLICY_IDS", "PolicyState", "greedy_channel",
     "init_policy_state", "make_policy", "policy_aux_init",

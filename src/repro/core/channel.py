@@ -13,7 +13,16 @@ registry of fading models so sweeps can compare scenarios:
   stays 2 sigma_n^2;
 * ``gauss_markov`` — temporally-correlated complex AR(1) field
   g(t) = rho g(t-1) + sqrt(1-rho^2) w(t), the standard block-to-block
-  correlated fading model; rho = 0 recovers i.i.d. Rayleigh.
+  correlated fading model; rho = 0 recovers i.i.d. Rayleigh;
+* ``mobility`` — the same AR(1) field with rho derived from terminal
+  speed / carrier frequency / round period via the Gaussian Doppler
+  autocorrelation (slow fading for pedestrian speeds, fast decorrelation
+  for vehicular ones) — see :func:`mobility_rho`;
+* ``outage_burst`` — Rayleigh fast fading gated by a two-state
+  Gilbert-Elliott outage chain: each client is "good" or "in outage",
+  outages arrive in correlated bursts (mean length ``burst_len`` rounds,
+  stationary outage probability ``outage_p``), and an in-outage gain is
+  pinned to the modulation clip floor (a deep fade, never NaN/inf).
 
 Every model is a pure ``(key, state) -> (gains, state)`` step (state is a
 fixed-shape (2, N) float32 array — the in-phase/quadrature field for
@@ -37,6 +46,7 @@ from typing import Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # The bitwise contract (grid == per-config scan engine, tests/test_grid.py)
 # requires a channel step to produce identical bits whether its sigmas are a
@@ -283,11 +293,139 @@ def _gauss_markov_step(key, state, sigmas, cfg, rho=0.9):
                                state, sigmas, cfg, rho)
 
 
+_LIGHT_SPEED_MPS = 299_792_458.0
+
+
+def mobility_rho(speed_mps: float = 1.5, carrier_hz: float = 2.4e9,
+                 round_s: float = 0.01) -> float:
+    """AR(1) coefficient implied by terminal mobility.
+
+    The Gaussian Doppler-spectrum autocorrelation of the complex field over
+    one round period T is exp(-2 (pi f_D T)^2) with Doppler shift
+    f_D = v f_c / c. Pedestrian defaults (1.5 m/s at 2.4 GHz, 10 ms rounds)
+    give rho ~ 0.75; v = 0 freezes the channel (rho = 1), vehicular speeds
+    push rho toward 0 (i.i.d. Rayleigh).
+    """
+    f_d = float(speed_mps) * float(carrier_hz) / _LIGHT_SPEED_MPS
+    return math.exp(-2.0 * (math.pi * f_d * float(round_s)) ** 2)
+
+
+def _mobility_init(key, sigmas, cfg, speed_mps=1.5, carrier_hz=2.4e9,
+                   round_s=0.01):
+    return _gauss_markov_init(key, sigmas, cfg,
+                              rho=mobility_rho(speed_mps, carrier_hz,
+                                               round_s))
+
+
+def _mobility_draw(key, n, speed_mps=1.5, carrier_hz=2.4e9, round_s=0.01):
+    return _gauss_markov_draw(key, n)
+
+
+def _mobility_apply(xy, state, sigmas, cfg, speed_mps=1.5, carrier_hz=2.4e9,
+                    round_s=0.01):
+    """Slow fading from mobility: :func:`_gauss_markov_apply` with rho set
+    by physics instead of chosen directly (power autocorrelation rho^2 —
+    the delegation is exact, bit for bit, which tests pin)."""
+    return _gauss_markov_apply(xy, state, sigmas, cfg,
+                               rho=mobility_rho(speed_mps, carrier_hz,
+                                                round_s))
+
+
+def _mobility_step(key, state, sigmas, cfg, speed_mps=1.5, carrier_hz=2.4e9,
+                   round_s=0.01):
+    return _mobility_apply(_mobility_draw(key, state.shape[1]), state,
+                           sigmas, cfg, speed_mps, carrier_hz, round_s)
+
+
+def _outage_burst_rates(outage_p, burst_len):
+    """Gilbert-Elliott transition probabilities from the stationary outage
+    probability and the mean burst length (in rounds).
+
+    p_recover = 1/burst_len (geometric burst duration), and p_enter is set
+    so the stationary bad-state mass p_enter/(p_enter + p_recover) is
+    exactly ``outage_p``.
+    """
+    p = float(outage_p)
+    ln = float(burst_len)
+    if not 0.0 <= p < 1.0:
+        raise ValueError(f"outage_p={p} must be in [0, 1)")
+    if ln < 1.0:
+        raise ValueError(f"burst_len={ln} must be >= 1 round")
+    p_recover = 1.0 / ln
+    p_enter = p * p_recover / (1.0 - p)
+    if p_enter > 1.0:
+        raise ValueError(
+            f"outage_p={p} with burst_len={ln} needs a good->bad "
+            f"probability {p_enter:.3f} > 1; keep outage_p <= "
+            f"burst_len / (1 + burst_len)")
+    return p_enter, p_recover
+
+
+def _outage_gain_floor(cfg):
+    """The in-outage gain: the modulation clip floor, rounded UP to the
+    nearest float32 so the emitted f32 gain never compares below the
+    float64 ``gain_bounds()`` lower bound (jnp.clip's implicit f32 cast
+    rounds it down)."""
+    lo, _ = cfg.gain_bounds()
+    f = np.float32(lo)
+    if float(f) < lo:
+        f = np.nextafter(f, np.float32(np.inf))
+    return float(f)
+
+
+def _outage_burst_init(key, sigmas, cfg, outage_p=0.1, burst_len=5.0):
+    """Stationary start: each client begins in outage w.p. ``outage_p``.
+    State row 0 is the {0,1} outage indicator; row 1 keeps the (2, N)
+    contract and stays zero."""
+    _outage_burst_rates(outage_p, burst_len)  # validate at build time
+    bad = (jax.random.uniform(key, sigmas.shape, dtype=jnp.float32)
+           < jnp.float32(outage_p)).astype(jnp.float32)
+    return _pin(jnp.stack([bad, jnp.zeros_like(bad)]))
+
+
+def _outage_burst_draw(key, n, outage_p=0.1, burst_len=5.0):
+    k_ray, k_tr = jax.random.split(key)
+    u = jax.random.uniform(k_ray, (n,), dtype=jnp.float32,
+                           minval=1e-12, maxval=1.0)
+    v = jax.random.uniform(k_tr, (n,), dtype=jnp.float32)
+    return u, v
+
+
+def _outage_burst_apply(raw, state, sigmas, cfg, outage_p=0.1,
+                        burst_len=5.0):
+    """Two-state Markov outage gate over Rayleigh fast fading.
+
+    In the good state the gain is the paper's clipped Exponential(2 sigma^2)
+    draw; in outage it is the modulation clip floor — the deepest fade the
+    rate model admits, so Eq. (8) stays finite and the scheduler sees a
+    terrible-but-real channel rather than a hole in the fleet.
+    """
+    u, v = raw
+    p_enter, p_recover = _outage_burst_rates(outage_p, burst_len)
+    lo, hi = cfg.gain_bounds()
+    bad = state[0] > 0.5
+    new_bad = jnp.where(bad, v >= jnp.float32(p_recover),
+                        v < jnp.float32(p_enter))
+    fast = _pin(jnp.clip(-2.0 * sigmas * sigmas * jnp.log(u), lo, hi))
+    gains = _pin(jnp.where(new_bad, jnp.float32(_outage_gain_floor(cfg)),
+                           fast))
+    new_state = _pin(jnp.stack([new_bad.astype(jnp.float32),
+                                jnp.zeros_like(state[1])]))
+    return gains, new_state
+
+
+def _outage_burst_step(key, state, sigmas, cfg, outage_p=0.1, burst_len=5.0):
+    return _outage_burst_apply(_outage_burst_draw(key, state.shape[1]),
+                               state, sigmas, cfg, outage_p, burst_len)
+
+
 CHANNEL_MODELS = {
     "rayleigh": (_rayleigh_init, _rayleigh_step),
     "rician": (_rician_init, _rician_step),
     "lognormal": (_lognormal_init, _lognormal_step),
     "gauss_markov": (_gauss_markov_init, _gauss_markov_step),
+    "mobility": (_mobility_init, _mobility_step),
+    "outage_burst": (_outage_burst_init, _outage_burst_step),
 }
 
 # name -> (draw, apply): the PRNG-consuming half and the elementwise half of
@@ -299,6 +437,8 @@ CHANNEL_RAW = {
     "rician": (_rician_draw, _rician_apply),
     "lognormal": (_lognormal_draw, _lognormal_apply),
     "gauss_markov": (_gauss_markov_draw, _gauss_markov_apply),
+    "mobility": (_mobility_draw, _mobility_apply),
+    "outage_burst": (_outage_burst_draw, _outage_burst_apply),
 }
 
 # Stable ids for lax.switch dispatch (grid runner); insertion order above.
@@ -311,7 +451,8 @@ def make_channel(name: str, sigmas: jax.Array, cfg: ChannelConfig,
 
     Returns a :class:`ChannelModel` whose ``step(key, state)`` is pure and
     scan/vmap/shard_map-friendly. ``params`` are model-specific Python
-    floats baked in at trace time (``k_factor``, ``shadow_db``, ``rho``).
+    floats baked in at trace time (``k_factor``, ``shadow_db``, ``rho``,
+    ``speed_mps``/``carrier_hz``/``round_s``, ``outage_p``/``burst_len``).
     """
     if name not in CHANNEL_MODELS:
         raise ValueError(f"unknown channel model {name!r} "

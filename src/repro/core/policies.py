@@ -51,6 +51,7 @@ from repro.core.fences import pin
 from repro.core.scheduler import (SchedulerConfig, greedy_coeffs,
                                   greedy_decide, sample_selection,
                                   solve_round, solve_round_coeffs,
+                                  uniform_coeffs, uniform_draw_m,
                                   update_queues_z)
 
 
@@ -95,6 +96,18 @@ class PolicyState(NamedTuple):
 PolicyStep = Callable[[jax.Array, jax.Array, PolicyState],
                       Tuple[jax.Array, jax.Array, jax.Array, PolicyState]]
 
+# Dynamic populations (repro.fl.population): every step also accepts two
+# trailing operands ``(active, n_active)`` — a (N,) bool activity mask over
+# the fixed arena plus its traced count. ``None`` (the default everywhere)
+# is a PYTHON-level branch, so legacy callers trace the exact historic
+# program, bit for bit. With a mask, each policy masks q to 0 on inactive
+# lanes BEFORE selection and before the Eq. 9 queue update (Z is charged
+# the expected power P*q of what the scheduler could actually have
+# selected), and clips its subset size into the active count so score
+# thresholds can never tie into inactive sentinel lanes. When the mask is
+# all-True every masking select is value-preserving per lane, which is what
+# the all-active bitwise contract with the legacy engines rests on.
+
 
 def _aux0_zeros(n: int) -> jax.Array:
     return jnp.zeros((n,), jnp.float32)
@@ -120,8 +133,10 @@ def _make_proposed(scfg: SchedulerConfig, ch: ChannelConfig, m_avg,
         solve = lambda gains, z: solve_round(gains, z, scfg, ch)  # noqa: E731
     pbar_src = ch if coeffs is None else coeffs
 
-    def step(key, gains, st: PolicyState):
+    def step(key, gains, st: PolicyState, active=None, n_active=None):
         q, p = solve(gains, st.z)
+        if active is not None:
+            q = jnp.where(active, q, 0.0)
         sel = sample_selection(key, q, scfg.guarantee_one)
         z = update_queues_z(st.z, q, p, pbar_src)
         return sel, q, p, PolicyState(z, st.aux, st.t + 1)
@@ -132,8 +147,29 @@ def _make_proposed(scfg: SchedulerConfig, ch: ChannelConfig, m_avg,
 def _make_uniform(scfg, ch, m_avg, solve_fn) -> PolicyStep:
     from repro.core.scheduler import uniform_selection
 
-    def step(key, gains, st: PolicyState):
-        sel, q, p = uniform_selection(key, scfg.n_clients, m_avg, ch)
+    def step(key, gains, st: PolicyState, active=None, n_active=None):
+        if active is None:
+            sel, q, p = uniform_selection(key, scfg.n_clients, m_avg, ch)
+        else:
+            # uniform_decide, mask-hardened: M' clips into the ACTIVE
+            # count (see uniform_draw_m) and inactive scores sink to -1,
+            # below every live score in [0, 1)
+            c = uniform_coeffs(scfg.n_clients, m_avg, ch)
+            k1, k2, _ = jax.random.split(key, 3)
+            take = jax.random.uniform(k1)
+            scores = jnp.where(active,
+                               jax.random.uniform(k2, (scfg.n_clients,)),
+                               -1.0)
+            take_hi = take < (c.m_avg - jnp.floor(c.m_avg))
+            m = uniform_draw_m(take_hi, c.m_avg, c.n, n_active=n_active)
+            thresh = -jnp.sort(-scores)[m - 1]
+            sel = scores >= thresh
+            q = jnp.where(active,
+                          jnp.full((scfg.n_clients,), c.q_val, jnp.float32),
+                          0.0)
+            p = jnp.full((scfg.n_clients,),
+                         (c.pn / jnp.maximum(m, 1)).astype(jnp.float32),
+                         jnp.float32)
         return sel, q, p, PolicyState(st.z, st.aux, st.t + 1)
 
     return step
@@ -142,8 +178,17 @@ def _make_uniform(scfg, ch, m_avg, solve_fn) -> PolicyStep:
 def _make_greedy(scfg, ch, m_avg, solve_fn) -> PolicyStep:
     m = max(1, int(round(m_avg)))
 
-    def step(key, gains, st: PolicyState):
-        sel, q, p = greedy_channel(key, gains, m, ch)
+    def step(key, gains, st: PolicyState, active=None, n_active=None):
+        if active is None:
+            sel, q, p = greedy_channel(key, gains, m, ch)
+        else:
+            c = greedy_coeffs(gains.shape[0], float(m), ch)
+            m_eff = jnp.clip(c.m, 1, jnp.maximum(n_active, 1))
+            score = jnp.where(active, gains, -jnp.inf)
+            thresh = -jnp.sort(-score)[m_eff - 1]
+            sel = score >= thresh
+            q = sel.astype(jnp.float32)
+            p = jnp.full_like(gains, c.pn / jnp.maximum(c.m, 1))
         return sel, q, p, PolicyState(st.z, st.aux, st.t + 1)
 
     return step
@@ -151,8 +196,17 @@ def _make_greedy(scfg, ch, m_avg, solve_fn) -> PolicyStep:
 
 def _make_proportional(scfg, ch, m_avg, solve_fn,
                        q_floor: float = 1e-3) -> PolicyStep:
-    def step(key, gains, st: PolicyState):
-        sel, q, p = proportional_gain(key, gains, m_avg, ch, q_floor)
+    def step(key, gains, st: PolicyState, active=None, n_active=None):
+        if active is None:
+            sel, q, p = proportional_gain(key, gains, m_avg, ch, q_floor)
+        else:
+            n = gains.shape[0]
+            g = jnp.where(active, gains, 0.0)
+            q = g / jnp.sum(g) * m_avg
+            q = jnp.where(active, jnp.clip(q, q_floor, 1.0), 0.0)
+            sel = jax.random.uniform(key, (n,)) < q
+            m_draw = jnp.maximum(jnp.sum(sel), 1)
+            p = jnp.full((n,), ch.p_bar * n / m_draw, jnp.float32)
         return sel, q, p, PolicyState(st.z, st.aux, st.t + 1)
 
     return step
@@ -162,14 +216,22 @@ def _make_update_aware(scfg, ch, m_avg, solve_fn,
                        q_floor: float = 1e-3) -> PolicyStep:
     n = scfg.n_clients
 
-    def step(key, gains, st: PolicyState):
+    def step(key, gains, st: PolicyState, active=None, n_active=None):
         norms = st.aux  # accumulated-update-norm proxy, grows while skipped
-        q = norms / jnp.maximum(jnp.sum(norms), 1e-12) * m_avg
+        norms_eff = norms if active is None else jnp.where(active, norms,
+                                                           0.0)
+        q = norms_eff / jnp.maximum(jnp.sum(norms_eff), 1e-12) * m_avg
         q = jnp.clip(q, q_floor, 1.0)
+        if active is not None:
+            q = jnp.where(active, q, 0.0)
         sel = jax.random.uniform(key, (n,)) < q
         m_draw = jnp.maximum(jnp.sum(sel), 1)
         p = jnp.full((n,), ch.p_bar * n / m_draw, jnp.float32)
         aux = jnp.where(sel, 1.0, norms + 1.0)
+        if active is not None:
+            # departed clients keep their proxy frozen: no local training
+            # happens while away, so the estimate neither grows nor resets
+            aux = jnp.where(active, aux, norms)
         return sel, q, p, PolicyState(st.z, aux, st.t + 1)
 
     return step
@@ -185,18 +247,27 @@ def _make_aoi_capped(scfg, ch, m_avg, solve_fn,
     cap = jnp.float32(max_age)
     _FORCE = jnp.float32(1e30)  # above any clipped gain
 
-    def step(key, gains, st: PolicyState):
+    def step(key, gains, st: PolicyState, active=None, n_active=None):
         age = st.aux
         forced = age >= cap
+        if active is not None:
+            forced = forced & active
         # forced clients all share the same top score; the `| forced` union
         # below is what guarantees every one of them is selected even when
         # there are more than m of them
         score = jnp.where(forced, _FORCE, gains)
-        thresh = -jnp.sort(-score)[m - 1]
+        if active is None:
+            m_eff = m
+        else:
+            score = jnp.where(active, score, -jnp.inf)
+            m_eff = jnp.clip(jnp.int32(m), 1, jnp.maximum(n_active, 1))
+        thresh = -jnp.sort(-score)[m_eff - 1]
         sel = (score >= thresh) | forced
         q = sel.astype(jnp.float32)  # degenerate, like greedy_channel
         m_draw = jnp.maximum(jnp.sum(sel), 1)
         p = jnp.full((n,), ch.p_bar * n / m_draw, jnp.float32)
+        # inactive clients keep aging: their information keeps staling
+        # while away, so a rejoining client is (correctly) force-eligible
         aux = jnp.where(sel, 0.0, age + 1.0)
         return sel, q, p, PolicyState(st.z, aux, st.t + 1)
 
@@ -309,9 +380,14 @@ def _fence(step: PolicyStep) -> PolicyStep:
     grid's bitwise-parity contract with run_simulation_scan depends on
     (tests/test_grid.py).
     """
-    def fenced(key, gains, st):
+    def fenced(key, gains, st, *mask):
+        # ``mask`` is the optional (active, n_active) operand pair of the
+        # dynamic-population engines; when absent (every legacy caller)
+        # this traces the exact historic program
         key, gains, st = pin((key, gains, st))
-        return pin(step(key, gains, st))
+        if mask:
+            mask = pin(mask)
+        return pin(step(key, gains, st, *mask))
 
     return fenced
 

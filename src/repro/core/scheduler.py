@@ -299,18 +299,25 @@ def schedule_step(key: jax.Array, gains: jax.Array, state: SchedulerState,
 # Baselines.
 # --------------------------------------------------------------------------
 
-def uniform_draw_m(take_hi: jax.Array, m_avg: float,
-                   n_clients: int) -> jax.Array:
+def uniform_draw_m(take_hi: jax.Array, m_avg: float, n_clients: int,
+                   n_active=None) -> jax.Array:
     """The uniform baseline's per-round subset size M' — floor(M) or
     ceil(M) (``take_hi`` is the pre-drawn Bernoulli for the ceil branch),
     **clipped into [1, N]**. The clip is the hardening for degenerate
     matched-M values: M <= 0 used to reach the score sort as m = 0-or-1
     only via a one-sided maximum, and M > N silently indexed the sort out
     of range (undefined under jit) — both now saturate instead.
+
+    Under an activity mask (dynamic populations, ``repro.fl.population``)
+    pass the traced active count as ``n_active``: the clip then saturates
+    at max(n_active, 1) instead of N, so M' can never tie the score-sort
+    threshold into inactive (sentinel-scored) lanes — the same bug class
+    the greedy baseline's m > N clip fixed.
     """
     m_lo = jnp.floor(m_avg).astype(jnp.int32)
     m = jnp.where(take_hi, m_lo + 1, m_lo)
-    return jnp.clip(m, 1, n_clients)
+    hi = n_clients if n_active is None else jnp.maximum(n_active, 1)
+    return jnp.clip(m, 1, hi)
 
 
 class UniformCoeffs(NamedTuple):

@@ -79,6 +79,10 @@ CHANNEL_RAW_PAD = {
     "rician": 0.0,
     "lognormal": (1.0, 0.0),
     "gauss_markov": 0.0,
+    "mobility": 0.0,
+    # outage_burst: (ray uniform -> 1.0 keeps log finite, transition
+    # uniform -> 1.0 never enters an outage on a pad lane)
+    "outage_burst": (1.0, 1.0),
 }
 
 # Policy raw fills: proposed pads its selection uniforms with 2.0 (never
@@ -170,17 +174,23 @@ def _pack_participants_sharded(sel, q, m_cap: int, n_local: int, axis_name):
 
 def _sharded_proposed(scfg: SchedulerConfig, ch: ChannelConfig, m_avg,
                       solve_fn, n_real: int, n_local: int, axis_name: str):
-    def step(raw, gains, z, aux, t, valid, local_ids, co):
+    def step(raw, gains, z, aux, t, valid, local_ids, co, active=None,
+             n_act=None):
         # solve_fn wins when given (the Pallas kernel); otherwise the
         # coefficient-driven solve on the runtime bundle — the operand
         # contract the sequential engine shares (repro/core/scheduler.py)
         solve = solve_fn or (
             lambda g, zz: solve_round_coeffs(g, zz, co.solve))
         q, p = solve(gains, z)
+        if active is not None:
+            # the sequential masked step's q -> 0 on inactive lanes, BEFORE
+            # selection and the Eq. 9 charge (repro.core.policies)
+            q = jnp.where(active, q, 0.0)
         sel = (raw < q) & valid
         if scfg.guarantee_one:
             none = jax.lax.psum(jnp.sum(sel), axis_name) == 0
-            score = jnp.where(valid, q, -jnp.inf)
+            live = valid if active is None else active
+            score = jnp.where(live, q, -jnp.inf)
             forced_at = _global_argmax(score, local_ids, axis_name)
             sel = jnp.where(none, local_ids == forced_at, sel)
         z = update_queues_z(z, q, p, co.solve)
@@ -199,13 +209,25 @@ def _sharded_uniform(scfg: SchedulerConfig, ch: ChannelConfig, m_avg,
     # evaluate in f64 there)
     c = uniform_coeffs(n_real, m_avg, ch)
 
-    def step(raw, gains, z, aux, t, valid, local_ids, co):
+    def step(raw, gains, z, aux, t, valid, local_ids, co, active=None,
+             n_act=None):
         take_hi = raw["take"] < (c.m_avg - jnp.floor(c.m_avg))
-        m = uniform_draw_m(take_hi, c.m_avg, c.n)
-        scores = jnp.where(valid, raw["scores"], -1.0)
-        thresh = _top_m_threshold(scores, m, k_static, axis_name)
-        sel = (raw["scores"] >= thresh) & valid
-        q = jnp.full((n_local,), c.q_val)
+        if active is None:
+            m = uniform_draw_m(take_hi, c.m_avg, c.n)
+            scores = jnp.where(valid, raw["scores"], -1.0)
+            thresh = _top_m_threshold(scores, m, k_static, axis_name)
+            sel = (raw["scores"] >= thresh) & valid
+            q = jnp.full((n_local,), c.q_val)
+        else:
+            # M' clips into the ACTIVE count so the threshold can never
+            # tie into inactive (-1-scored) lanes — the mask-hardening of
+            # uniform_draw_m, mirrored from the sequential masked step
+            m = uniform_draw_m(take_hi, c.m_avg, c.n, n_active=n_act)
+            scores = jnp.where(active, raw["scores"], -1.0)
+            thresh = _top_m_threshold(scores, m, k_static, axis_name)
+            sel = (scores >= thresh) & valid
+            q = jnp.where(active,
+                          jnp.full((n_local,), c.q_val, jnp.float32), 0.0)
         p = jnp.full((n_local,), c.pn / jnp.maximum(m, 1))
         return sel, q, p, z, aux, t + 1
 
@@ -218,10 +240,17 @@ def _sharded_greedy(scfg: SchedulerConfig, ch: ChannelConfig, m_avg,
     m = int(c.m)
     k_static = max(1, min(n_local, min(m, n_real)))
 
-    def step(raw, gains, z, aux, t, valid, local_ids, co):
-        score = jnp.where(valid, gains, -jnp.inf)
-        thresh = _top_m_threshold(score, m, k_static, axis_name)
-        sel = (gains >= thresh) & valid
+    def step(raw, gains, z, aux, t, valid, local_ids, co, active=None,
+             n_act=None):
+        if active is None:
+            score = jnp.where(valid, gains, -jnp.inf)
+            thresh = _top_m_threshold(score, m, k_static, axis_name)
+            sel = (gains >= thresh) & valid
+        else:
+            m_eff = jnp.clip(c.m, 1, jnp.maximum(n_act, 1))
+            score = jnp.where(active, gains, -jnp.inf)
+            thresh = _top_m_threshold(score, m_eff, k_static, axis_name)
+            sel = (score >= thresh) & valid
         q = sel.astype(jnp.float32)
         p = jnp.full((n_local,), c.pn / jnp.maximum(c.m, 1))
         return sel, q, p, z, aux, t + 1
@@ -275,7 +304,7 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
                           channel_params: tuple, scfg: SchedulerConfig,
                           ch: ChannelConfig, sigmas: jax.Array, *,
                           n_shards: int, m_cap: int, m_avg: float = 0.0,
-                          solve_fn=None, devices=None):
+                          solve_fn=None, population=None, devices=None):
     """Build the one-``shard_map`` scheduling step for one round.
 
     Returns ``schedule(raw_ch, raw_pol, pol_state, ch_state, co) ->
@@ -287,11 +316,26 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
     inside, per call — and ``co`` is the runtime ``DecisionCoeffs`` bundle
     (replicated across the mesh; the operand contract of
     ``repro/fl/decision.py``).
+
+    ``population`` (a ``PopulationConfig`` or its param tuple) switches on
+    the dynamic-population round: the signature becomes ``schedule(raw_ch,
+    raw_pol, (raw_churn, raw_fail), pol_state, (ch_state, active), co)``
+    with the churn/failure uniforms drawn full-shape outside (the
+    ``fold_in`` side-channels of ``repro.fl.population``) and the activity
+    mask riding the channel-state slot, exactly as the sequential
+    population round carries it. Inactive lanes follow the pad-lane
+    hygiene: never selected, q = 0, excluded from the power accounting;
+    stragglers (selected-but-failed) keep their airtime and count but are
+    dropped from the packed participants.
     """
     n = int(sigmas.shape[0])
     devices = validate_client_shards(n_shards, sim_policy, sim_channel,
                                      devices)
     _validate_m_avg(sim_policy, m_avg)
+    pcfg = None
+    if population is not None:
+        from repro.fl.population import population_config
+        pcfg = population_config(population)
     mesh = Mesh(np.array(devices), ("client",))
     n_pad = padded_len(n)
     n_local = n_pad // n_shards
@@ -300,6 +344,21 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
     policy_step = _SHARDED_POLICIES[sim_policy](
         scfg, ch, m_avg, solve_fn, n, n_local, "client")
     sig_pad = pad_client_axis(sigmas, n_pad, 0.0)
+
+    def account_and_pack(gains, valid, sel, q, p, delivered, co):
+        # the fenced accounting island + participant pack shared by both
+        # round variants (fixed-population: delivered IS sel)
+        rate = coeff_rate(gains, p, co.acct)
+        t_comm = blocked_total_sharded(
+            jnp.where(sel, co.acct.ell / jnp.maximum(rate, 1e-9), 0.0),
+            "client", n_shards)
+        power = blocked_total_sharded(
+            jnp.where(valid, p * q, 0.0), "client", n_shards)
+        t_comm, power = jax.lax.optimization_barrier((t_comm, power))
+        n_sel = jax.lax.psum(jnp.sum(sel), "client")
+        sel_idx, sel_valid, q_sel = _pack_participants_sharded(
+            delivered, q, m_cap, n_local, "client")
+        return t_comm, power, n_sel, sel_idx, sel_valid, q_sel
 
     def shard_body(raw_ch, raw_pol, z, aux, t, cst, sig, co):
         local_ids = (_axis_start("client", n_local)
@@ -313,18 +372,41 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
         raw_pol, z, aux = pin((raw_pol, z, aux))
         sel, q, p, z, aux, t = jax.lax.optimization_barrier(
             policy_step(raw_pol, gains, z, aux, t, valid, local_ids, co))
-        rate = coeff_rate(gains, p, co.acct)
-        t_comm = blocked_total_sharded(
-            jnp.where(sel, co.acct.ell / jnp.maximum(rate, 1e-9), 0.0),
-            "client", n_shards)
-        power = blocked_total_sharded(
-            jnp.where(valid, p * q, 0.0), "client", n_shards)
-        t_comm, power = jax.lax.optimization_barrier((t_comm, power))
-        n_sel = jax.lax.psum(jnp.sum(sel), "client")
-        sel_idx, sel_valid, q_sel = _pack_participants_sharded(
-            sel, q, m_cap, n_local, "client")
+        t_comm, power, n_sel, sel_idx, sel_valid, q_sel = account_and_pack(
+            gains, valid, sel, q, p, sel, co)
         return (t_comm, power, n_sel, sel_idx, sel_valid, q_sel, z, aux, t,
                 cst)
+
+    def shard_body_pop(raw_ch, raw_pol, raw_churn, raw_fail, active, z,
+                       aux, t, cst, sig, co):
+        local_ids = (_axis_start("client", n_local)
+                     + jnp.arange(n_local, dtype=jnp.int32))
+        valid = local_ids < n
+        raw_ch, cst, sig = pin((raw_ch, cst, sig))
+        gains, cst = chan_apply(raw_ch, cst, sig, ch, **ckw)
+        gains, cst = jax.lax.optimization_barrier((gains, cst))
+        raw_pol, z, aux, raw_churn, raw_fail, active = pin(
+            (raw_pol, z, aux, raw_churn, raw_fail, active))
+        # churn: the per-lane Markov step of population.churn_step, with
+        # its never-empty guarantee distributed exactly like guarantee_one
+        # (psum the count, global-argmax the forced lane). Pad lanes can
+        # never activate (& valid), matching their dead-lane hygiene.
+        new = (jnp.where(active, raw_churn >= pcfg.p_leave,
+                         raw_churn < pcfg.p_join) & valid)
+        none = jax.lax.psum(jnp.sum(new), "client") == 0
+        forced_at = _global_argmax(
+            jnp.where(valid, raw_churn, -jnp.inf), local_ids, "client")
+        active = jnp.where(none, local_ids == forced_at, new)
+        n_act = jax.lax.psum(jnp.sum(active.astype(jnp.int32)), "client")
+        sel, q, p, z, aux, t = jax.lax.optimization_barrier(
+            policy_step(raw_pol, gains, z, aux, t, valid, local_ids, co,
+                        active, n_act))
+        # stragglers: airtime/count charged on sel, training sees delivered
+        delivered = sel & ~(sel & (raw_fail < pcfg.p_fail))
+        t_comm, power, n_sel, sel_idx, sel_valid, q_sel = account_and_pack(
+            gains, valid, sel, q, p, delivered, co)
+        return (t_comm, power, n_sel, sel_idx, sel_valid, q_sel, z, aux, t,
+                cst, active)
 
     dummy_key = jax.random.PRNGKey(0)
     raw_ch_eg = jax.eval_shape(
@@ -332,15 +414,26 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
     raw_pol_eg = jax.eval_shape(
         lambda k: draw_policy_raw(sim_policy, k, n), dummy_key)
     co_eg = decision_coeffs(scfg, ch)
-    in_specs = (
-        jax.tree.map(_client_spec, raw_ch_eg),
-        jax.tree.map(_client_spec, raw_pol_eg),
-        P("client"), P("client"), P(), P(None, "client"), P("client"),
-        jax.tree.map(lambda _: P(), co_eg))  # coeffs: replicated scalars
-    out_specs = (P(), P(), P(), P(), P(), P(), P("client"), P("client"),
-                 P(), P(None, "client"))
-    sharded = shard_map(shard_body, mesh=mesh, in_specs=in_specs,
-                        out_specs=out_specs)
+    co_spec = jax.tree.map(lambda _: P(), co_eg)  # coeffs: replicated
+    raw_specs = (jax.tree.map(_client_spec, raw_ch_eg),
+                 jax.tree.map(_client_spec, raw_pol_eg))
+    if pcfg is None:
+        in_specs = raw_specs + (
+            P("client"), P("client"), P(), P(None, "client"), P("client"),
+            co_spec)
+        out_specs = (P(), P(), P(), P(), P(), P(), P("client"),
+                     P("client"), P(), P(None, "client"))
+        sharded = shard_map(shard_body, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs)
+    else:
+        in_specs = raw_specs + (
+            P("client"), P("client"), P("client"),
+            P("client"), P("client"), P(), P(None, "client"), P("client"),
+            co_spec)
+        out_specs = (P(), P(), P(), P(), P(), P(), P("client"),
+                     P("client"), P(), P(None, "client"), P("client"))
+        sharded = shard_map(shard_body_pop, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs)
 
     def constrain(raw):
         # the raws are drawn full-shape OUTSIDE the shard_map (mesh-
@@ -367,7 +460,30 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
         return (t_comm, power, n_sel, sel_idx, sel_valid, q_sel,
                 PolicyState(z[:n], aux[:n], t), cst[..., :n])
 
-    return schedule
+    def schedule_pop(raw_ch, raw_pol, raw_pop, pol_state: PolicyState,
+                     ch_state, co):
+        cst, active = ch_state
+        raw_churn, raw_fail = raw_pop
+        raw_ch = _pad_raw(constrain(raw_ch), CHANNEL_RAW_PAD[sim_channel],
+                          n_pad)
+        raw_pol = _pad_raw(constrain(raw_pol),
+                           POLICY_RAW_PAD[sim_policy], n_pad)
+        # churn/fail pads: any finite value works — pad lanes are fenced
+        # out by `& valid` before the uniforms are consumed
+        raw_churn = pad_client_axis(constrain(raw_churn), n_pad, 2.0)
+        raw_fail = pad_client_axis(constrain(raw_fail), n_pad, 2.0)
+        active = pad_client_axis(active, n_pad, False)
+        z = pad_client_axis(pol_state.z, n_pad, 0.0)
+        aux = pad_client_axis(pol_state.aux, n_pad, 0.0)
+        cst = pad_client_axis(cst, n_pad, 0.0)
+        (t_comm, power, n_sel, sel_idx, sel_valid, q_sel, z, aux, t, cst,
+         active) = sharded(raw_ch, raw_pol, raw_churn, raw_fail, active, z,
+                           aux, pol_state.t, cst, sig_pad, co)
+        return (t_comm, power, n_sel, sel_idx, sel_valid, q_sel,
+                PolicyState(z[:n], aux[:n], t),
+                (cst[..., :n], active[:n]))
+
+    return schedule if pcfg is None else schedule_pop
 
 
 def draw_channel_raw(channel: str, key, n: int, channel_params):
@@ -492,14 +608,24 @@ def make_client_sharded_round(ds, sim, scfg: SchedulerConfig,
     schedule = make_sharded_schedule(
         sim.policy, sim.channel, sim.channel_params, scfg, ch, sigmas,
         n_shards=sim.client_shards, m_cap=sim.m_cap, m_avg=sim.uniform_m,
-        solve_fn=solve)
+        solve_fn=solve, population=sim.population)
 
     def sim_round(params, pol_state, ch_state, key):
         k_ch, k_sel, k_bat = jax.random.split(key, 3)
         raw_ch = draw_channel_raw(sim.channel, k_ch, n, sim.channel_params)
         raw_pol = draw_policy_raw(sim.policy, k_sel, n)
-        (t_comm, power, n_sel, sel_idx, sel_valid, q_sel, pol_state,
-         ch_state) = schedule(raw_ch, raw_pol, pol_state, ch_state, co)
+        if sim.population is not None:
+            # churn/failure uniforms: fold_in side-channels of the ROUND
+            # key, drawn full-shape outside the mesh — the same bits the
+            # sequential population round consumes (mesh-invariant)
+            from repro.fl.population import draw_churn_raw, draw_fail_raw
+            raw_pop = (draw_churn_raw(key, n), draw_fail_raw(key, n))
+            (t_comm, power, n_sel, sel_idx, sel_valid, q_sel, pol_state,
+             ch_state) = schedule(raw_ch, raw_pol, raw_pop, pol_state,
+                                  ch_state, co)
+        else:
+            (t_comm, power, n_sel, sel_idx, sel_valid, q_sel, pol_state,
+             ch_state) = schedule(raw_ch, raw_pol, pol_state, ch_state, co)
         imgs, labs = sample_batches(k_bat, ds.client_images,
                                     ds.client_labels, sel_idx, sim.m_cap,
                                     sim.local_steps, sim.batch)

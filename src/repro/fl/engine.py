@@ -106,6 +106,14 @@ class SimConfig:
                                  # Theorem-2 solve + selection + queues)
                                  # over D devices (fl/client_shard.py)
     wire_dtype: str = "float32"  # delta-aggregation wire ("float32"|"bfloat16")
+    population: Optional[tuple] = None
+                                 # None: fixed fleet (the legacy engines,
+                                 # untouched). ((name, value), ...) builds a
+                                 # repro.fl.population.PopulationConfig —
+                                 # Markov churn + straggler failures over an
+                                 # activity mask; () is the degenerate
+                                 # all-active scenario, bitwise-equal to
+                                 # None on mesh 1 (tests/test_population.py)
 
 
 # --------------------------------------------------------------------------
@@ -189,6 +197,11 @@ def make_round_core(ds: FederatedDataset, sim: SimConfig,
             "make_round_core builds the single-device-client round; "
             "client_shards needs fl/client_shard.py's round (make_sim_round "
             "dispatches)")
+    if sim.population is not None:
+        raise ValueError(
+            "make_round_core builds the fixed-fleet round; sim.population "
+            "needs fl/population.py's masked round (make_sim_round "
+            "dispatches)")
     sharded_update = None
     if sim.participant_shards:
         sharded_update = make_sharded_round_update(
@@ -265,6 +278,10 @@ def make_sim_round(ds: FederatedDataset, sim: SimConfig,
         from repro.fl.client_shard import make_client_sharded_round
         return make_client_sharded_round(ds, sim, scfg, ch, sigmas,
                                          solve_fn, coeffs=co)
+    if sim.population is not None:
+        from repro.fl.population import make_population_round
+        return make_population_round(ds, sim, scfg, ch, sigmas, solve_fn,
+                                     coeffs=co)
     solve = resolve_solve_fn(scfg, ch, sim.solver, solve_fn)
     channel = make_channel(sim.channel, sigmas, ch,
                            **dict(sim.channel_params))
@@ -354,6 +371,23 @@ def make_chunk_runner(ds: FederatedDataset, sim: SimConfig,
     return run_chunk
 
 
+def init_channel_carry(key, sim: SimConfig, channel, n_clients: int):
+    """The channel-state carry slot off the config key's side-channels.
+
+    The model's stationary init consumes ``fold_in(key, CHANNEL_INIT_TAG)``;
+    with ``sim.population`` set the slot becomes the ``(ch_state, active)``
+    pair the population round carries, the round-0 mask coming off
+    ``POP_INIT_TAG`` — both side-channels, so the round-key chain is
+    identical in every configuration.
+    """
+    ch0 = channel.init(jax.random.fold_in(key, CHANNEL_INIT_TAG))
+    if sim.population is None:
+        return ch0
+    from repro.fl.population import init_active_mask, population_config
+    return (ch0, init_active_mask(key, n_clients,
+                                  population_config(sim.population)))
+
+
 def init_carry(key, params, scfg: SchedulerConfig, sim: SimConfig, sigmas,
                ch: ChannelConfig):
     """Fresh scan-engine carry (copies params: chunks donate their input).
@@ -369,7 +403,7 @@ def init_carry(key, params, scfg: SchedulerConfig, sim: SimConfig, sigmas,
                            **dict(sim.channel_params))
     return (jax.tree.map(jnp.array, params),
             init_policy_state(sim.policy, scfg.n_clients),
-            channel.init(jax.random.fold_in(key, CHANNEL_INIT_TAG)), key,
+            init_channel_carry(key, sim, channel, scfg.n_clients), key,
             jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
 
 
@@ -431,7 +465,7 @@ def make_config_runner(ds: FederatedDataset, sim: SimConfig,
         sim_round = make_sim_round(ds, sim, scfg, ch, sigmas, solve_fn,
                                    coeffs=co)
         pol0 = init_policy_state(sim.policy, n)
-        ch0 = channel.init(jax.random.fold_in(key, CHANNEL_INIT_TAG))
+        ch0 = init_channel_carry(key, sim, channel, n)
         return run_config_chunks(sim_round, eval_fn, sim.rounds,
                                  sim.eval_every, params, pol0, ch0, key)
 

@@ -86,12 +86,22 @@ class GridSpec:
     sigma_dists: tuple = ("heterogeneous",)
     policies: tuple = (("proposed", ()),)
     seeds: tuple = (0,)
+    # population scenarios (repro.fl.population param tuples, e.g.
+    # ``((("p_fail", 0.25),), ())`` — the empty entry is the degenerate
+    # all-active scenario). The default () keeps the grid population-free
+    # and its compiled program byte-identical to the pre-population grid;
+    # a non-empty tuple adds a population axis between channels and
+    # sigma_dists in every run_grid output array.
+    populations: tuple = ()
 
     def channel_entries(self):
         return _normalize(self.channels)
 
     def policy_entries(self):
         return _normalize(self.policies)
+
+    def population_entries(self):
+        return tuple(tuple(p) for p in self.populations)
 
     @property
     def shape(self) -> Tuple[int, int, int, int]:
@@ -101,11 +111,16 @@ class GridSpec:
     @property
     def size(self) -> int:
         c, s, p, k = self.shape
-        return c * s * p * k
+        return c * s * p * k * max(1, len(self.populations))
 
     def cells(self):
-        """(channel_idx, policy_idx) pairs, C-order — one compiled
-        ``lax.map`` body each."""
+        """One compiled ``lax.map`` body each: (channel_idx, policy_idx)
+        pairs on a population-free grid, (channel_idx, population_idx,
+        policy_idx) triples when ``populations`` is set."""
+        if self.populations:
+            return list(itertools.product(range(len(self.channels)),
+                                          range(len(self.populations)),
+                                          range(len(self.policies))))
         return list(itertools.product(range(len(self.channels)),
                                       range(len(self.policies))))
 
@@ -118,18 +133,26 @@ class GridSpec:
             if name not in POLICIES:
                 raise ValueError(f"unknown policy {name!r} "
                                  f"(registered: {sorted(POLICIES)})")
+        if self.populations:
+            from repro.fl.population import population_config
+            for p in self.population_entries():
+                population_config(p)  # raises on malformed scenarios
         if not self.seeds:
             raise ValueError("GridSpec.seeds must be non-empty")
 
 
 def sim_for_config(sim: SimConfig, spec: GridSpec, ci: int, si: int,
-                   pi: int) -> Tuple[SimConfig, object]:
+                   pi: int, *, gi=None) -> Tuple[SimConfig, object]:
     """The per-config SimConfig + sigma dist a sequential reference run
-    (``run_simulation_scan``) needs to reproduce grid cell (ci, si, pi)."""
+    (``run_simulation_scan``) needs to reproduce grid cell (ci, si, pi) —
+    or (ci, gi, si, pi) on a population grid (``gi`` indexes
+    ``spec.populations``)."""
     cname, cparams = spec.channel_entries()[ci]
     pname, pparams = spec.policy_entries()[pi]
+    pop = spec.population_entries()[gi] if gi is not None else None
     one = dataclasses.replace(sim, channel=cname, channel_params=cparams,
-                              policy=pname, policy_params=pparams)
+                              policy=pname, policy_params=pparams,
+                              population=pop)
     return one, spec.sigma_dists[si]
 
 
@@ -153,6 +176,10 @@ def make_grid_runner(ds: FederatedDataset, sim: SimConfig,
             "participant- or client-sharded round inside it is not "
             "supported — use sim.participant_shards / sim.client_shards "
             "with run_simulation, or the grid with both at 0")
+    if sim.population is not None:
+        raise ValueError(
+            "the grid owns the population axis: leave sim.population unset "
+            "and declare scenarios via GridSpec.populations")
     n = scfg.n_clients
     devices = list(devices if devices is not None else jax.devices())
     mesh = Mesh(np.array(devices), ("grid",))
@@ -162,13 +189,25 @@ def make_grid_runner(ds: FederatedDataset, sim: SimConfig,
     round_core = make_round_core(ds, sim, scfg)
     eval_fn = make_eval_fn(ds, sim)
     co_host = decision_coeffs(scfg, ch)
+    pops = spec.population_entries()
+    if pops:
+        from repro.fl.population import (init_active_mask,
+                                         make_population_core,
+                                         population_config)
+        pop_bound = [(population_config(p),
+                      make_population_core(
+                          ds, sim, scfg, population_config(p)))
+                     for p in pops]
 
-    def make_cell(ci, pi):
-        """One (channel, policy) cell: statically-bound config program."""
+    def make_cell(ci, pi, gi=None):
+        """One (channel[, population], policy) cell: statically-bound
+        config program."""
         cname, cparams = spec.channel_entries()[ci]
         pname, pparams = spec.policy_entries()[pi]
         init_fn, step_fn = CHANNEL_MODELS[cname]
         ckw = dict(cparams)
+        if gi is not None:
+            pcfg, pop_core = pop_bound[gi]
 
         def one_config(params, sid, key, co):
             # the policy binds to the RUNTIME coefficient bundle (operand
@@ -179,14 +218,20 @@ def make_grid_runner(ds: FederatedDataset, sim: SimConfig,
             sig = sigma_table[sid]
             ch_state = init_fn(jax.random.fold_in(key, CHANNEL_INIT_TAG),
                                sig, ch, **ckw)
+            if gi is not None:
+                # the (ch_state, active) carry of the population engine —
+                # the same init as engine.init_channel_carry
+                ch_state = (ch_state, init_active_mask(key, n, pcfg))
             pol_state = init_policy_state(pname, n)
 
             def channel_step(k, st):
                 return step_fn(k, st, sig, ch, **ckw)
 
+            core = round_core if gi is None else pop_core
+
             def sim_round(p, pst, cst, k):
-                return round_core(channel_step, policy_step, co.acct, p,
-                                  pst, cst, k)
+                return core(channel_step, policy_step, co.acct, p,
+                            pst, cst, k)
 
             # the same traced trajectory program as run_simulation_scan —
             # sharing the structure end to end is what makes grid cells
@@ -197,7 +242,10 @@ def make_grid_runner(ds: FederatedDataset, sim: SimConfig,
 
         return one_config
 
-    cell_fns = [make_cell(ci, pi) for ci, pi in spec.cells()]
+    if pops:
+        cell_fns = [make_cell(ci, pi, gi) for ci, gi, pi in spec.cells()]
+    else:
+        cell_fns = [make_cell(ci, pi) for ci, pi in spec.cells()]
 
     def shard_fn(params, sigma_ids, keys, co):
         # one sequential lax.map per cell: a config executes exactly its
@@ -255,7 +303,10 @@ def run_grid(key, params, ds: FederatedDataset, sim: SimConfig,
     plots. History layout matches :func:`run_simulation_scan` exactly:
     per config, ``comm_time`` / ``test_acc`` / ``avg_power`` /
     ``n_selected`` at each eval round, arranged as
-    (channels, sigma_dists, policies, seeds, eval_points).
+    (channels, sigma_dists, policies, seeds, eval_points) — with a
+    population axis after channels when ``spec.populations`` is set:
+    (channels, populations, sigma_dists, policies, seeds, eval_points),
+    plus a ``"populations"`` key listing the scenario dicts.
 
     Baseline policies need ``sim.uniform_m > 0`` (the matched average
     participation M — use ``repro.fl.simulation.match_uniform_m``). One M
@@ -279,24 +330,32 @@ def run_grid(key, params, ds: FederatedDataset, sim: SimConfig,
     cell_outs = runner(params, sigma_ids, keys)
 
     n_ch, n_sig, n_pol, n_seed = spec.shape
+    has_pop = bool(spec.populations)
+    n_pop = len(spec.populations) if has_pop else 1
     ev = np.asarray(eval_rounds(sim.rounds, sim.eval_every))
     e = len(ev)
     c_cell = n_sig * n_seed
-    # assemble (channels, sigma_dists, policies, seeds, E) from the
-    # per-(channel, policy)-cell outputs, dropping padding
-    outs = {k: np.zeros((n_ch, n_sig, n_pol, n_seed, e), np.float64)
+    # assemble (channels[, populations], sigma_dists, policies, seeds, E)
+    # from the per-cell outputs, dropping padding; the population axis only
+    # exists when GridSpec.populations is set
+    shape = (n_ch, n_pop, n_sig, n_pol, n_seed, e)
+    outs = {k: np.zeros(shape, np.float64)
             for k in ("comm_time", "test_acc", "power_cum")}
-    outs["n_selected"] = np.zeros((n_ch, n_sig, n_pol, n_seed, e), np.int64)
-    for (ci, pi), cell in zip(spec.cells(), cell_outs):
+    outs["n_selected"] = np.zeros(shape, np.int64)
+    for cell_key, cell in zip(spec.cells(), cell_outs):
+        (ci, gi, pi) = cell_key if has_pop else (cell_key[0], 0,
+                                                 cell_key[1])
         comm, acc, pcum, nsel = [np.asarray(x)[:c_cell] for x in cell]
-        outs["comm_time"][ci, :, pi] = comm.reshape(n_sig, n_seed, e)
-        outs["test_acc"][ci, :, pi] = acc.reshape(n_sig, n_seed, e)
-        outs["power_cum"][ci, :, pi] = pcum.reshape(n_sig, n_seed, e)
-        outs["n_selected"][ci, :, pi] = nsel.reshape(n_sig, n_seed, e)
+        outs["comm_time"][ci, gi, :, pi] = comm.reshape(n_sig, n_seed, e)
+        outs["test_acc"][ci, gi, :, pi] = acc.reshape(n_sig, n_seed, e)
+        outs["power_cum"][ci, gi, :, pi] = pcum.reshape(n_sig, n_seed, e)
+        outs["n_selected"][ci, gi, :, pi] = nsel.reshape(n_sig, n_seed, e)
+    if not has_pop:
+        outs = {k: v[:, 0] for k, v in outs.items()}
 
     # host-side float64 math mirrors run_simulation_scan's history exactly
     avg_power = outs.pop("power_cum") / (ev + 1) / ds.n_clients
-    return {
+    result = {
         "round": ev,
         "comm_time": outs["comm_time"],
         "test_acc": outs["test_acc"],
@@ -309,3 +368,7 @@ def run_grid(key, params, ds: FederatedDataset, sim: SimConfig,
         "seeds": np.asarray(spec.seeds),
         "n_devices": n_dev,
     }
+    if has_pop:
+        result["populations"] = [dict(p) for p in
+                                 spec.population_entries()]
+    return result

@@ -105,6 +105,10 @@ def run_simulation(key, params, ds: FederatedDataset, sim: SimConfig,
         raise ValueError(
             "the legacy loop engine is the sequential parity reference; "
             "participant/client sharding needs engine='scan'")
+    if sim.population is not None:
+        raise ValueError(
+            "the legacy loop engine has no dynamic-population path; "
+            "sim.population needs engine='scan'")
     return run_simulation_loop(key, params, ds, sim, scfg, ch, sigmas)
 
 

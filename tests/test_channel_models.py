@@ -1,6 +1,8 @@
 """Channel-model registry: stationary distributions, temporal correlation,
 and the (key, state) -> (gains, state) contract (repro/core/channel.py)."""
 
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,11 +10,14 @@ import pytest
 
 from repro.core import (CHANNEL_IDS, CHANNEL_MODELS, ChannelConfig,
                         channel_state_zero, draw_gains, homogeneous_sigmas,
-                        make_channel, resolve_sigmas)
+                        make_channel, mobility_rho, resolve_sigmas)
+from repro.core.channel import _outage_gain_floor
 
 N = 64
 CH = ChannelConfig(n_clients=N)
 SIG = homogeneous_sigmas(N)  # sigma=1 -> gains ~ Exp(mean 2), clip inactive
+S = int(os.environ.get("REPRO_STATS_SAMPLES", "400"))
+Z = 4.5  # CI width in sigmas (deterministic under fixed seeds)
 
 
 def _rollout(model, key, rounds):
@@ -29,8 +34,11 @@ def _rollout(model, key, rounds):
 
 def test_registry_names_and_ids():
     assert set(CHANNEL_MODELS) == {"rayleigh", "rician", "lognormal",
-                                   "gauss_markov"}
+                                   "gauss_markov", "mobility",
+                                   "outage_burst"}
     assert CHANNEL_IDS["rayleigh"] == 0
+    # ids are append-only: the pre-scenario registry keeps its numbering
+    assert CHANNEL_IDS["gauss_markov"] == 3
     with pytest.raises(ValueError):
         make_channel("awgn", SIG, CH)
 
@@ -111,6 +119,86 @@ def test_gauss_markov_stationary_init():
     # up; the stationary init starts at full power (2 sigma^2 ± sample noise)
     assert 1.0 < g[0].mean() < 3.5
     assert 1.2 < g[:5].mean() < 3.0
+
+
+def test_mobility_delegates_to_gauss_markov_bitwise():
+    """``mobility`` is gauss_markov at the Jakes-derived rho — the physical
+    parameterization must not change a single bit of the AR(1) math."""
+    key = jax.random.PRNGKey(9)
+    kw = dict(speed_mps=3.0, carrier_hz=5.9e9, round_s=0.02)
+    mob = _rollout(make_channel("mobility", SIG, CH, **kw), key, 50)
+    gm = _rollout(make_channel("gauss_markov", SIG, CH,
+                               rho=mobility_rho(**kw)), key, 50)
+    np.testing.assert_array_equal(mob, gm)
+
+
+def test_mobility_rho_physics():
+    """rho falls with speed/carrier/round length, and the pedestrian
+    default sits in the slow-fading regime (strongly correlated)."""
+    assert 0.0 < mobility_rho(120.0 / 3.6) < mobility_rho(1.5) < 1.0
+    assert mobility_rho(0.0) == 1.0
+    assert mobility_rho(1.5, carrier_hz=28e9) < mobility_rho(1.5)
+    assert mobility_rho(1.5) > 0.7
+
+
+def test_outage_burst_validation():
+    """Rates are validated when the state is built: an outage probability
+    unreachable at the requested burst length must fail loudly."""
+    key = jax.random.PRNGKey(10)
+    for bad in (dict(outage_p=-0.1), dict(outage_p=1.0),
+                dict(burst_len=0.5),
+                dict(outage_p=0.9, burst_len=2.0)):  # needs p_enter > 1
+        with pytest.raises(ValueError):
+            make_channel("outage_burst", SIG, CH, **bad).init(key)
+
+
+def test_outage_burst_floor_within_bounds():
+    """In-outage gains sit AT the dedicated floor — the f32 value rounded
+    UP from the f64 clip bound, so a single outage step still satisfies the
+    one-step gain contract (every model's fast-path clip saturates one ulp
+    lower, at f32(lo), which is where the trajectory min can land)."""
+    lo, _ = CH.gain_bounds()
+    g = _rollout(make_channel("outage_burst", SIG, CH, outage_p=0.5,
+                              burst_len=3.0), jax.random.PRNGKey(11), 200)
+    floor = _outage_gain_floor(CH)
+    assert floor >= lo
+    assert float(g.min()) >= float(np.float32(lo))
+    assert (g == np.float32(floor)).mean() > 0.2  # outages actually happen
+
+
+@pytest.mark.stats
+def test_outage_burst_marginal_matches_configured_probability():
+    """Stationary outage fraction == outage_p, within a CI derived from the
+    sample budget. The Gilbert-Elliott chain is sticky, so the indicator
+    variance inflates by (1 + r) / (1 - r) with r = 1 - p_enter - p_recover
+    (AR(1) autocorrelation of the state chain); the CI uses the inflated
+    sigma so the assertion stays deterministic at any budget."""
+    outage_p, burst_len = 0.2, 4.0
+    rounds = 4 * S
+    g = _rollout(make_channel("outage_burst", SIG, CH, outage_p=outage_p,
+                              burst_len=burst_len),
+                 jax.random.PRNGKey(12), rounds)
+    frac = float((g == np.float32(_outage_gain_floor(CH))).mean())
+    p_recover = 1.0 / burst_len
+    p_enter = outage_p * p_recover / (1.0 - outage_p)
+    r = 1.0 - p_enter - p_recover
+    var = outage_p * (1.0 - outage_p) * (1.0 + r) / (1.0 - r)
+    sigma = np.sqrt(var / (rounds * N))
+    assert abs(frac - outage_p) < Z * sigma, (frac, outage_p, Z * sigma)
+
+
+@pytest.mark.stats
+def test_mobility_autocorrelation_matches_jakes_rho():
+    """Power autocorrelation of the mobility channel is rho^2 at the
+    Jakes-derived rho (mirror of the gauss_markov autocorrelation test)."""
+    kw = dict(speed_mps=10.0, carrier_hz=2.4e9, round_s=0.01)
+    rho = mobility_rho(**kw)
+    g = _rollout(make_channel("mobility", SIG, CH, **kw),
+                 jax.random.PRNGKey(13), 8 * S)
+    x, y = g[:-1].ravel(), g[1:].ravel()
+    corr = np.corrcoef(x, y)[0, 1]
+    assert abs(corr - rho ** 2) < 0.05, (corr, rho)
+    assert abs(g.mean() - 2.0) < 0.1  # stationary law still Exp(2 sigma^2)
 
 
 def test_resolve_sigmas():

@@ -132,3 +132,101 @@ def test_kernel_oracle_parity_deterministic_sweep():
             seed = int(rng.integers(0, 2 ** 31))
             _assert_matches_oracle(*_states(jax.random.PRNGKey(seed), n),
                                    cfg=cfg)
+
+
+# ---------------------------------------------------------------------------
+# Activity-mask lane hygiene (the dynamic-population engines run the kernel
+# UNMASKED and mask q at the policy layer — repro.core.policies).
+# ---------------------------------------------------------------------------
+
+def _boundary_states(n):
+    """Branch-boundary tiles from test_padded_lane_hygiene: gain clip
+    bounds, Z = 0 exactly, huge queues."""
+    lo, hi = CH.gain_bounds()
+    reps = -(-n // 6)
+    gains = jnp.tile(jnp.array([lo, hi, 1.0, 1e-3, 1e3, 37.0],
+                               jnp.float32), reps)[:n]
+    z = jnp.tile(jnp.array([0.0, 0.0, 1e4, 5.0, 0.0, 1e-6], jnp.float32),
+                 reps)[:n]
+    return gains, z
+
+
+def _block_boundary_mask(n):
+    """All-active except sentinel lanes straddling every kernel block
+    boundary (block-1, block, block+1) plus the last lane."""
+    off = [b * BLOCK + d for b in range(1, n // BLOCK + 1)
+           for d in (-1, 0, 1)] + [n - 1]
+    return jnp.ones((n,), bool).at[jnp.array(
+        [i for i in off if i < n])].set(False)
+
+
+@pytest.mark.parametrize("solver", ["jnp", "pallas"])
+def test_masked_step_inactive_lanes_at_block_boundaries(solver):
+    """Inactive sentinel lanes sitting exactly on kernel block boundaries,
+    with branch-boundary states, are never selected and take q = 0 exactly
+    — on the jnp solve and the Pallas kernel alike — and no lane (active,
+    inactive, or kernel pad) emits NaN/inf."""
+    from repro.core import make_policy
+    from repro.core.policies import init_policy_state
+
+    n = 3 * BLOCK + 17
+    cfg = SchedulerConfig(n_clients=n, model_bits=32 * 555178.0)
+    solve = (None if solver == "jnp"
+             else lambda g, z: _kernel(g, z, cfg=cfg))
+    step = make_policy("proposed", cfg, CH, solve_fn=solve)
+    gains, z = _boundary_states(n)
+    active = _block_boundary_mask(n)
+    st0 = init_policy_state("proposed", n)._replace(z=z)
+    n_act = jnp.sum(active.astype(jnp.int32))
+    sel, q, p, st1 = step(jax.random.PRNGKey(0), gains, st0, active, n_act)
+    sel, q, p = np.asarray(sel), np.asarray(q), np.asarray(p)
+    inactive = ~np.asarray(active)
+    assert not sel[inactive].any()
+    np.testing.assert_array_equal(q[inactive], 0.0)
+    assert np.isfinite(q).all() and np.isfinite(p).all()
+    assert np.isfinite(np.asarray(st1.z)).all()
+    assert (np.asarray(st1.z) >= 0.0).all()
+
+
+def test_masked_jnp_vs_pallas_parity():
+    """Masked-solve parity: the policy-layer mask is a `where` AFTER the
+    shared solve, so masked(kernel) == where(active, kernel, 0) BITWISE —
+    the mask may not perturb a single active-lane bit — and the masked
+    kernel matches the masked jnp oracle to the usual f32 round-off, with
+    inactive lanes exactly 0.0 on both."""
+    from repro.core import make_policy
+    from repro.core.policies import init_policy_state
+
+    n = BLOCK + 1
+    cfg = SchedulerConfig(n_clients=n, model_bits=32 * 555178.0,
+                          guarantee_one=False)
+    gains, z = _states(jax.random.PRNGKey(3), n)
+    active = _block_boundary_mask(n)
+    n_act = jnp.sum(active.astype(jnp.int32))
+    st0 = init_policy_state("proposed", n)._replace(z=z)
+    key = jax.random.PRNGKey(1)
+
+    outs = {}
+    for solver in ("jnp", "pallas"):
+        solve = (None if solver == "jnp"
+                 else lambda g, zz: _kernel(g, zz, cfg=cfg))
+        step = make_policy("proposed", cfg, CH, solve_fn=solve)
+        outs[solver] = step(key, gains, st0, active, n_act)
+
+    q_j, q_k = np.asarray(outs["jnp"][1]), np.asarray(outs["pallas"][1])
+    inactive = ~np.asarray(active)
+    # mask transparency: the masked kernel q IS the raw kernel q on active
+    # lanes, bit for bit
+    q_raw, _ = _kernel(gains, z, cfg=cfg)
+    np.testing.assert_array_equal(
+        q_k, np.where(np.asarray(active), np.asarray(q_raw), 0.0))
+    # both solvers zero the same inactive lanes exactly
+    np.testing.assert_array_equal(q_j[inactive], 0.0)
+    np.testing.assert_array_equal(q_k[inactive], 0.0)
+    # and agree on active lanes to kernel/oracle round-off
+    np.testing.assert_allclose(q_k, q_j, rtol=1e-5, atol=1e-6)
+    # identical Bernoulli raws + near-identical q: selections match wherever
+    # q is not within round-off of the shared uniform draw
+    np.testing.assert_allclose(np.asarray(outs["pallas"][2]),
+                               np.asarray(outs["jnp"][2]), rtol=1e-5,
+                               atol=1e-3)

@@ -1,0 +1,130 @@
+"""Policy tournament (repro/fl/tournament.py): scoring math, the one-call
+grid contract, and the sweep legs.
+
+The unmarked smoke runs a 2-scenario x 2-policy tournament at PR time; the
+``tournament``-marked leg runs the full churn x outage x straggler x policy
+sweep on the nightly schedule (ci.yml), mirroring the slow/massive marker
+split."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ChannelConfig, SchedulerConfig
+from repro.data.synthetic import make_cifar10_like
+from repro.fl.engine import SimConfig
+from repro.fl.tournament import (AXES, leaderboard, run_tournament,
+                                 tournament_metrics)
+from repro.models.registry import make_model
+
+N = 20
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    key = jax.random.PRNGKey(0)
+    ds = make_cifar10_like(key, n_clients=N, per_client=32, n_test=128,
+                           h=8, w=8)
+    params = make_model("mlp", ds).init_fn(jax.random.PRNGKey(1))
+    ch = ChannelConfig(n_clients=N)
+    scfg = SchedulerConfig(n_clients=N, model_bits=32 * 50000.0)
+    sim = SimConfig(rounds=4, eval_every=2, m_cap=3, batch=4, local_steps=1,
+                    eval_size=128, model="mlp", uniform_m=3.0)
+    return ds, params, ch, scfg, sim
+
+
+def _check_metrics(t, shape):
+    assert t["regret_acc"].shape == shape
+    assert t["time_to_acc"].shape == shape
+    assert (t["regret_acc"] >= 0).all()
+    # the oracle itself has zero regret in every scenario
+    pol_ax = AXES.index("policies")
+    assert (t["regret_acc"].min(axis=pol_ax) == 0).all()
+    fin = np.isfinite(t["time_to_acc"])
+    assert np.isfinite(t["regret_tta"][fin]).all()
+    assert (t["regret_tta"][fin] >= 0).all()
+    names = [r["policy"] for r in t["leaderboard"]]
+    assert sorted(names) == sorted(t["policies"])
+    regs = [r["mean_regret_acc"] for r in t["leaderboard"]]
+    assert regs == sorted(regs)
+
+
+def test_tournament_smoke(tiny_setup):
+    """PR-time 2-scenario x 2-policy smoke: one compiled call, coherent
+    regret/time-to-accuracy metrics, ordered leaderboard."""
+    ds, params, ch, scfg, sim = tiny_setup
+    t = run_tournament(
+        jax.random.PRNGKey(2), params, ds, sim, scfg, ch,
+        channels=("rayleigh",),
+        populations=((), (("p_fail", 0.25),)),
+        policies=("proposed", "uniform"),
+        seeds=(0,))
+    _check_metrics(t, (1, 2, 1, 2, 1))
+    assert t["test_acc"].shape == (1, 2, 1, 2, 1, 3)
+    assert t["populations"] == [{}, {"p_fail": 0.25}]
+
+
+@pytest.mark.tournament
+def test_tournament_full_sweep(tiny_setup):
+    """Nightly leg: churn x outage x straggler x policy x seed in one
+    compiled call (the ISSUE acceptance sweep, at test scale)."""
+    ds, params, ch, scfg, sim = tiny_setup
+    t = run_tournament(
+        jax.random.PRNGKey(2), params, ds, sim, scfg, ch,
+        channels=("rayleigh",
+                  ("outage_burst", (("outage_p", 0.2), ("burst_len", 3.0)))),
+        populations=((),
+                     (("p_join", 0.3), ("p_leave", 0.2)),
+                     (("p_fail", 0.3),)),
+        policies=("proposed", "uniform", "greedy_channel"),
+        seeds=(0, 1))
+    _check_metrics(t, (2, 3, 1, 3, 2))
+
+
+def test_tournament_metrics_math():
+    """Hand-built two-policy history: the scoring is checked against
+    numbers computed by hand (oracle, regret, tta, inf handling)."""
+    # (C=1, G=1, S=1, P=2, K=1, E=3)
+    acc = np.zeros((1, 1, 1, 2, 1, 3))
+    comm = np.zeros((1, 1, 1, 2, 1, 3))
+    acc[0, 0, 0, 0, 0] = [0.2, 0.5, 0.8]   # policy 0: reaches 0.72 at e=2
+    acc[0, 0, 0, 1, 0] = [0.1, 0.2, 0.3]   # policy 1: never reaches 0.72
+    comm[0, 0, 0, 0, 0] = [1.0, 2.0, 3.0]
+    comm[0, 0, 0, 1, 0] = [0.5, 1.0, 1.5]
+    m = tournament_metrics({"test_acc": acc, "comm_time": comm},
+                           acc_target_frac=0.9)
+    np.testing.assert_allclose(m["final_acc"][..., 0, :], 0.8)
+    np.testing.assert_allclose(m["regret_acc"][0, 0, 0, :, 0], [0.0, 0.5])
+    np.testing.assert_allclose(m["acc_target"][0, 0, 0, :, 0], 0.72)
+    assert m["time_to_acc"][0, 0, 0, 0, 0] == 3.0
+    assert np.isinf(m["time_to_acc"][0, 0, 0, 1, 0])
+    # inf - 3.0 stays inf; the never-reached policy is infinitely behind
+    assert np.isinf(m["regret_tta"][0, 0, 0, 1, 0])
+    assert m["regret_tta"][0, 0, 0, 0, 0] == 0.0
+    rows = leaderboard(m, ["proposed", "uniform"])
+    assert rows[0]["policy"] == "proposed"
+    assert rows[0]["oracle_wins"] == 1
+    assert rows[1]["unreached"] == 1
+
+
+def test_tournament_metrics_all_unreached():
+    """Nobody reaches the target: inf - inf must score 0, not NaN."""
+    acc = np.full((1, 1, 1, 2, 1, 2), 0.1)
+    acc[0, 0, 0, 0, 0, -1] = 0.5   # oracle final 0.5, target 0.45...
+    acc[0, 0, 0, 0, 0, 0] = 0.1    # ...but NO eval point reaches it
+    acc[..., -1] = np.minimum(acc[..., -1], 0.4)
+    comm = np.ones_like(acc)
+    m = tournament_metrics({"test_acc": acc, "comm_time": comm},
+                           acc_target_frac=1.1)
+    assert np.isinf(m["time_to_acc"]).all()
+    np.testing.assert_array_equal(m["regret_tta"], 0.0)
+    assert not np.isnan(m["regret_tta"]).any()
+
+
+def test_tournament_metrics_rejects_legacy_grid():
+    """A population-free grid dict (5-axis history) is a usage error, not
+    a silent mis-indexing."""
+    with pytest.raises(ValueError, match="population"):
+        tournament_metrics({"test_acc": np.zeros((1, 1, 2, 1, 3)),
+                            "comm_time": np.zeros((1, 1, 2, 1, 3))})
