@@ -1,0 +1,179 @@
+"""Bench-regression gate: compare benchmarks/out/*.json to committed
+baselines, fail CI on >25% regression of any tracked metric.
+
+``python -m benchmarks.compare``            — gate mode (CI bench-smoke):
+    every metric in :data:`METRICS` is resolved in the bench's
+    ``benchmarks/out/<bench>.json`` dump and compared to its committed
+    ``benchmarks/baselines/<bench>.json`` value. A missing out file, a
+    missing metric path, or a direction-aware delta beyond the threshold
+    fails the run (exit 1) after printing the full delta table.
+``python -m benchmarks.compare --update``   — regenerate the baseline
+    files from the current out/ dumps (run ``scripts/update_baselines.sh``
+    to produce those under the CI-matched profile first).
+
+Baselines are committed, human-reviewable JSON:
+``{"<dotted.path>": {"value": <measured>, "direction": "lower"|"higher"}}``
+— ``direction`` says which way is GOOD ("lower" for latencies/us-per-call,
+"higher" for throughputs), so a regression is a move the wrong way by more
+than ``--threshold`` (default 0.25). Improvements never fail; they print
+in the table so a suspiciously large win still gets eyeballs. The metric
+registry below is the single source of truth for what is tracked; the
+baseline files carry only measured values (plus the direction copied out
+for reviewability) and are refreshed wholesale by ``--update``.
+
+The tracked set deliberately leans on throughput/latency aggregates that
+are stable on a 2-core CI runner and skips micro-timings that flap (the
+25% threshold absorbs shared-runner noise on the rest).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASE_DIR = os.path.dirname(os.path.abspath(__file__))
+OUT_DIR = os.path.join(BASE_DIR, "out")
+BASELINE_DIR = os.path.join(BASE_DIR, "baselines")
+
+# bench name -> {dotted path into benchmarks/out/<bench>.json: direction}.
+# direction is which way is GOOD for that metric.
+METRICS = {
+    "engine": {
+        "sim_n128.rounds_per_sec_scan": "higher",
+        "sched_n100000.rounds_per_sec_scan": "higher",
+        "solve_n100000_jnp": "lower",
+    },
+    "grid": {
+        "configs_per_sec_grid": "higher",
+    },
+    "round": {
+        "m_cap.32.rounds_per_sec_sharded": "higher",
+    },
+    "massive": {
+        "n.100000.sequential.rounds_per_sec": "higher",
+        "n.100000.solve_jnp_us": "lower",
+        "n.100000.decision_stitched_us": "lower",
+        "n.100000.decision_fused_us": "lower",
+        "n.1000000.decision_fused_us": "lower",
+    },
+    "service": {
+        "scenarios.full.decisions_per_sec": "higher",
+        "scenarios.batch64.p99_ms": "lower",
+    },
+    "kernels": {
+        "solve.100000": "lower",
+        "decision.100000.stitched_us": "lower",
+        "decision.100000.fused_us": "lower",
+        "decision.1000000.fused_us": "lower",
+    },
+}
+
+
+def resolve(obj, dotted: str):
+    """Walk a dotted path through nested dicts (keys are JSON strings)."""
+    for part in dotted.split("."):
+        if not isinstance(obj, dict) or part not in obj:
+            raise KeyError(dotted)
+        obj = obj[part]
+    if not isinstance(obj, (int, float)) or isinstance(obj, bool):
+        raise TypeError(f"{dotted} resolved to non-scalar {type(obj)}")
+    return float(obj)
+
+
+def load_out(name: str, out_dir: str):
+    path = os.path.join(out_dir, f"{name}.json")
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"{path} missing — did the '{name}' bench run? (bench-smoke "
+            f"must include it in --only for the gate to see its dump)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def update(out_dir: str, baseline_dir: str) -> int:
+    os.makedirs(baseline_dir, exist_ok=True)
+    for name, metrics in METRICS.items():
+        out = load_out(name, out_dir)
+        base = {p: {"value": resolve(out, p), "direction": d}
+                for p, d in metrics.items()}
+        path = os.path.join(baseline_dir, f"{name}.json")
+        with open(path, "w") as f:
+            json.dump(base, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path} ({len(base)} metrics)")
+    return 0
+
+
+def gate(out_dir: str, baseline_dir: str, threshold: float) -> int:
+    rows, failures = [], []
+    for name, metrics in METRICS.items():
+        bpath = os.path.join(baseline_dir, f"{name}.json")
+        if not os.path.exists(bpath):
+            failures.append(f"{name}: baseline {bpath} missing (run "
+                            "scripts/update_baselines.sh and commit)")
+            continue
+        with open(bpath) as f:
+            base = json.load(f)
+        try:
+            out = load_out(name, out_dir)
+        except FileNotFoundError as e:
+            failures.append(str(e))
+            continue
+        for path, direction in metrics.items():
+            key = f"{name}:{path}"
+            if path not in base:
+                failures.append(f"{key}: not in baseline (stale baseline — "
+                                "rerun scripts/update_baselines.sh)")
+                continue
+            old = float(base[path]["value"])
+            try:
+                new = resolve(out, path)
+            except (KeyError, TypeError) as e:
+                failures.append(f"{key}: missing from out dump ({e})")
+                continue
+            # signed change in the BAD direction, as a fraction of baseline
+            regress = ((new - old) if direction == "lower"
+                       else (old - new)) / abs(old) if old else 0.0
+            status = "REGRESSED" if regress > threshold else "ok"
+            rows.append((key, direction, old, new, regress, status))
+            if regress > threshold:
+                failures.append(
+                    f"{key}: {old:.4g} -> {new:.4g} "
+                    f"({regress * 100:+.1f}% worse, direction={direction}, "
+                    f"threshold={threshold * 100:.0f}%)")
+
+    if rows:
+        wid = max(len(r[0]) for r in rows)
+        print(f"{'metric':<{wid}}  dir     baseline      current   "
+              "delta-worse  status")
+        for key, direction, old, new, regress, status in rows:
+            print(f"{key:<{wid}}  {direction:<6}{old:>12.4g} {new:>12.4g}  "
+                  f"{regress * 100:>+9.1f}%   {status}")
+    if failures:
+        print("\nbench regression gate FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print(f"\nbench regression gate passed "
+          f"({len(rows)} metrics within {threshold * 100:.0f}%)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baselines from the current out/ dumps")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="fractional regression that fails (default 0.25)")
+    ap.add_argument("--out-dir", default=OUT_DIR)
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    args = ap.parse_args(argv)
+    if args.update:
+        return update(args.out_dir, args.baseline_dir)
+    return gate(args.out_dir, args.baseline_dir, args.threshold)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -646,10 +646,43 @@ def bench_massive(prof):
             jax.block_until_ready(solve(gains, z))
         solve_us = (time.time() - t0) / iters * 1e6
         entry["solve_jnp_us"] = solve_us
-        results["n"][n] = entry
         _emit(f"massive_n{n}_solve", solve_us,
               f"per_client_ns={solve_us * 1000 / n:.1f};"
               f"speedup_sharded={entry['speedup']:.2f}")
+        # decision-only: the full per-round decision step (solve + select +
+        # Eq. 9 + accounting), stitched vs the fused megakernel drop-in —
+        # the solver="pallas_fused" hot path at this N. Off-TPU the fused
+        # row runs the kernel in interpret mode (validation penalty, not
+        # kernel speed); see bench_kernels for the labelled pair.
+        from repro.core import make_policy
+        from repro.core.policies import init_policy_state
+        from repro.fl.decision import (decision_coeffs, decision_step,
+                                       make_fused_decision)
+        co = decision_coeffs(scfg, ch)
+        st = init_policy_state("proposed", n)._replace(
+            z=jnp.abs(jax.random.normal(jax.random.PRNGKey(2),
+                                        (n,))).astype(jnp.float32) * 10)
+        gains32 = gains.astype(jnp.float32)
+
+        def stitched(co, k, g, s):
+            step = make_policy("proposed", scfg, ch, coeffs=co.solve)
+            return decision_step(step, co.acct, k, g, s)
+
+        def fused(co, k, g, s):
+            return make_fused_decision(scfg, co)(None, None, k, g, s)
+
+        for label, fn in (("stitched", stitched), ("fused", fused)):
+            f = jax.jit(fn)
+            jax.block_until_ready(f(co, key, gains32, st))
+            d_iters = 2 if n >= 1_000_000 else 5
+            t0 = time.time()
+            for _ in range(d_iters):
+                jax.block_until_ready(f(co, key, gains32, st))
+            d_us = (time.time() - t0) / d_iters * 1e6
+            entry[f"decision_{label}_us"] = d_us
+            _emit(f"massive_n{n}_decision_{label}", d_us,
+                  f"per_client_ns={d_us * 1000 / n:.1f}")
+        results["n"][n] = entry
     _dump("massive", results)
     return results
 
@@ -736,12 +769,30 @@ def bench_service(prof):
 # ------------------------------------------------------------------ kernels
 
 def bench_kernels(prof):
-    """us/call for the paper-core scheduler solve (jnp path) and oracles."""
+    """us/call for the paper-core scheduler solve (jnp path) and the fused
+    decision megakernel vs the stitched decision it replaces.
+
+    The fused leg times the FULL per-round decision (Theorem-2 solve +
+    Bernoulli selection + Eq. 9 queue update + accounting) as one jitted
+    step, stitched (``decision_step`` + coefficient-driven policy) vs the
+    ``kernels/decision_fused.py`` megakernel drop-in, at N up to 10^6 —
+    the bitwise-parity pair tests/test_decision_fused.py pins. Off-TPU the
+    kernel runs in interpret mode, so its absolute time documents the
+    (expected, large) CPU validation penalty, not kernel speed; the
+    stitched row is the meaningful CPU number and the regression gate
+    tracks both (benchmarks/compare.py).
+
+    JSON artifact: benchmarks/out/kernels.json.
+    """
     import jax
     import jax.numpy as jnp
-    from repro.core import ChannelConfig, SchedulerConfig
+    from repro.core import ChannelConfig, SchedulerConfig, make_policy
+    from repro.core.policies import init_policy_state
     from repro.core.scheduler import solve_round
+    from repro.fl.decision import (decision_coeffs, decision_step,
+                                   make_fused_decision)
 
+    results = {"solve": {}, "decision": {}}
     for n in (100, 3597, 100_000):
         ch = ChannelConfig(n_clients=n)
         cfg = SchedulerConfig(n_clients=n, model_bits=32 * 555178.0)
@@ -754,8 +805,47 @@ def bench_kernels(prof):
         for _ in range(iters):
             jax.block_until_ready(f(gains, z))
         us = (time.time() - t0) / iters * 1e6
+        results["solve"][n] = us
         _emit(f"kernel_scheduler_solve_n{n}", us,
               f"per_client_ns={us * 1000 / n:.1f}")
+
+    mode = "compiled" if jax.default_backend() == "tpu" else "interpret"
+    for n in (10_000, 100_000, 1_000_000):
+        ch = ChannelConfig(n_clients=n)
+        scfg = SchedulerConfig(n_clients=n, model_bits=32 * 555178.0)
+        co = decision_coeffs(scfg, ch)
+        gains = jnp.exp(jax.random.normal(jax.random.PRNGKey(0),
+                                          (n,))).astype(jnp.float32)
+        st = init_policy_state("proposed", n)._replace(
+            z=jnp.abs(jax.random.normal(jax.random.PRNGKey(1),
+                                        (n,))).astype(jnp.float32) * 10)
+        key = jax.random.PRNGKey(2)
+
+        def stitched(co, key, gains, st):
+            step = make_policy("proposed", scfg, ch, coeffs=co.solve)
+            return decision_step(step, co.acct, key, gains, st)
+
+        def fused(co, key, gains, st):
+            return make_fused_decision(scfg, co)(None, None, key, gains, st)
+
+        entry = {"mode": mode}
+        for label, fn in (("stitched", stitched), ("fused", fused)):
+            f = jax.jit(fn)
+            jax.block_until_ready(f(co, key, gains, st))
+            iters = 2 if (n >= 1_000_000 and mode == "interpret") else 5
+            t0 = time.time()
+            for _ in range(iters):
+                jax.block_until_ready(f(co, key, gains, st))
+            us = (time.time() - t0) / iters * 1e6
+            entry[f"{label}_us"] = us
+            _emit(f"kernel_decision_{label}_n{n}", us,
+                  f"per_client_ns={us * 1000 / n:.1f};mode="
+                  f"{'compiled' if label == 'stitched' else mode}")
+        entry["fused_over_stitched"] = (entry["fused_us"]
+                                        / entry["stitched_us"])
+        results["decision"][n] = entry
+    _dump("kernels", results)
+    return results
 
 
 BENCHES = {

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Refresh the committed bench-regression baselines (benchmarks/baselines/).
+#
+# Runs the CI bench-smoke bench set under the SAME profile and device
+# layout the .github/workflows/ci.yml bench-smoke job uses (--smoke, 8
+# virtual CPU devices), then rewrites the baseline JSONs from the fresh
+# benchmarks/out/ dumps. Review the diff before committing — a baseline
+# update is a statement that the new numbers are the expected ones.
+#
+#   ./scripts/update_baselines.sh
+#   git diff benchmarks/baselines/
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
+PYTHONPATH=src python -m benchmarks.run --smoke \
+  --only engine,grid,tournament,round,massive,service,kernels
+PYTHONPATH=src python -m benchmarks.compare --update

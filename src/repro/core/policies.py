@@ -300,6 +300,16 @@ def _draw_proposed(key, n):
     return jax.random.uniform(key, (n,))
 
 
+def draw_selection_uniform(key, n):
+    """The ``proposed`` policy's selection uniforms, exactly as
+    ``sample_selection`` draws them from the step key. Public alias for
+    raw-carrying callers — the fused decision path
+    (``fl/decision.py::make_fused_decision``) and the client-sharded
+    engine — so a pre-drawn ``u`` can never drift from the stitched
+    policy's in-step draw (same key, same shape, same dtype)."""
+    return _draw_proposed(key, n)
+
+
 def _draw_uniform(key, n):
     # uniform_selection: k1 (ceil-branch Bernoulli), k2 (scores), k3 unused
     k1, k2, k3 = jax.random.split(key, 3)

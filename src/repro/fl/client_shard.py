@@ -199,6 +199,39 @@ def _sharded_proposed(scfg: SchedulerConfig, ch: ChannelConfig, m_avg,
     return step
 
 
+def _sharded_proposed_fused(scfg: SchedulerConfig, ch: ChannelConfig, m_avg,
+                            solve_fn, n_real: int, n_local: int,
+                            axis_name: str):
+    """The megakernel twin of :func:`_sharded_proposed`: each shard runs
+    solve + Bernoulli comparison + Eq. 9 queue update as ONE Pallas pass
+    over its (n_local,) slice (``kernels/decision_fused.py``), bitwise-
+    equal to the stitched step because the kernel reuses the jnp oracle's
+    traced ops on the runtime operand vector. The cross-shard pieces —
+    guarantee-one psum/argmax, the blocked accounting reduce in
+    ``account_and_pack`` — stay outside, exactly as before (the kernel's
+    per-lane comm-time/power summands are recomputed there from the same
+    (gains, q, p); the expressions are identical, so the fold is too).
+    """
+    from repro.kernels.decision_fused import (decision_fused,
+                                              pack_decision_operands)
+
+    def step(raw, gains, z, aux, t, valid, local_ids, co, active=None,
+             n_act=None):
+        ops = pack_decision_operands(co.solve, co.acct)
+        sel_raw, q, p, z, _tc, _pq = decision_fused(gains, z, raw, ops,
+                                                    active=active)
+        sel = sel_raw & valid
+        if scfg.guarantee_one:
+            none = jax.lax.psum(jnp.sum(sel), axis_name) == 0
+            live = valid if active is None else active
+            score = jnp.where(live, q, -jnp.inf)
+            forced_at = _global_argmax(score, local_ids, axis_name)
+            sel = jnp.where(none, local_ids == forced_at, sel)
+        return sel, q, p, z, aux, t + 1
+
+    return step
+
+
 def _sharded_uniform(scfg: SchedulerConfig, ch: ChannelConfig, m_avg,
                      solve_fn, n_real: int, n_local: int, axis_name: str):
     m_hi = int(np.floor(m_avg)) + 1  # static bound: m' in [1, min(m_hi, N)]
@@ -304,7 +337,8 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
                           channel_params: tuple, scfg: SchedulerConfig,
                           ch: ChannelConfig, sigmas: jax.Array, *,
                           n_shards: int, m_cap: int, m_avg: float = 0.0,
-                          solve_fn=None, population=None, devices=None):
+                          solve_fn=None, population=None, devices=None,
+                          fused: bool = False):
     """Build the one-``shard_map`` scheduling step for one round.
 
     Returns ``schedule(raw_ch, raw_pol, pol_state, ch_state, co) ->
@@ -327,6 +361,11 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
     hygiene: never selected, q = 0, excluded from the power accounting;
     stragglers (selected-but-failed) keep their airtime and count but are
     dropped from the packed participants.
+
+    ``fused=True`` (``solver="pallas_fused"``, ``policy="proposed"`` only)
+    swaps the per-shard policy step for the fused Pallas megakernel
+    variant — solve + selection + Eq. 9 in one pass per shard slice,
+    bitwise-equal to the stitched step (tests/test_decision_fused.py).
     """
     n = int(sigmas.shape[0])
     devices = validate_client_shards(n_shards, sim_policy, sim_channel,
@@ -341,8 +380,12 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
     n_local = n_pad // n_shards
     ckw = dict(channel_params)
     _, chan_apply = CHANNEL_RAW[sim_channel]
-    policy_step = _SHARDED_POLICIES[sim_policy](
-        scfg, ch, m_avg, solve_fn, n, n_local, "client")
+    if fused and sim_policy != "proposed":
+        raise ValueError("fused=True needs policy='proposed' (the only "
+                         "policy with a fused decision kernel)")
+    make_step = (_sharded_proposed_fused if fused
+                 else _SHARDED_POLICIES[sim_policy])
+    policy_step = make_step(scfg, ch, m_avg, solve_fn, n, n_local, "client")
     sig_pad = pad_client_axis(sigmas, n_pad, 0.0)
 
     def account_and_pack(gains, valid, sel, q, p, delivered, co):
@@ -519,18 +562,25 @@ def make_schedule_runner(sigmas: jax.Array, scfg: SchedulerConfig,
     trajectories are comparable exactly (the accounting island must agree
     bit for bit; tests/test_client_sharded.py's massive leg checks this at
     N = 10^5).
+
+    ``solver="pallas_fused"`` (with ``policy="proposed"``) routes the
+    decision through the fused megakernel on both branches — the whole
+    sequential decision in one kernel pass, or one pass per shard slice —
+    bitwise-equal to the stitched paths, so the sequential-vs-sharded
+    comparison above is unchanged.
     """
     from repro.fl.engine import resolve_solve_fn
 
     n = int(sigmas.shape[0])
     solve = resolve_solve_fn(scfg, ch, solver, solve_fn)
+    fused = solver == "pallas_fused" and policy == "proposed"
     chan = make_channel(channel, sigmas, ch, **dict(channel_params))
     co_host = decision_coeffs(scfg, ch)
     if client_shards:
         schedule = make_sharded_schedule(
             policy, channel, channel_params, scfg, ch, sigmas,
             n_shards=client_shards, m_cap=m_cap, m_avg=m_avg,
-            solve_fn=solve, devices=devices)
+            solve_fn=solve, devices=devices, fused=fused)
 
         def round_fn(pol_state, ch_state, k, co):
             k_ch, k_sel, _ = jax.random.split(k, 3)
@@ -546,9 +596,13 @@ def make_schedule_runner(sigmas: jax.Array, scfg: SchedulerConfig,
             # same function the scan engine and the service run)
             step = make_policy(policy, scfg, ch, m_avg=m_avg,
                                solve_fn=solve, coeffs=co.solve)
+            decision = decision_step
+            if fused:
+                from repro.fl.decision import make_fused_decision
+                decision = make_fused_decision(scfg, co)
             k_ch, k_sel, _ = jax.random.split(k, 3)
             gains, ch_state = channel_obs(chan.step, k_ch, ch_state)
-            sel, q, p, t_comm, power, n_sel, pol_state = decision_step(
+            sel, q, p, t_comm, power, n_sel, pol_state = decision(
                 step, co.acct, k_sel, gains, pol_state)
             return pol_state, ch_state, t_comm, power, n_sel
 
@@ -608,7 +662,8 @@ def make_client_sharded_round(ds, sim, scfg: SchedulerConfig,
     schedule = make_sharded_schedule(
         sim.policy, sim.channel, sim.channel_params, scfg, ch, sigmas,
         n_shards=sim.client_shards, m_cap=sim.m_cap, m_avg=sim.uniform_m,
-        solve_fn=solve, population=sim.population)
+        solve_fn=solve, population=sim.population,
+        fused=(sim.solver == "pallas_fused" and sim.policy == "proposed"))
 
     def sim_round(params, pol_state, ch_state, key):
         k_ch, k_sel, k_bat = jax.random.split(key, 3)

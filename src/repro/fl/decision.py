@@ -139,3 +139,74 @@ def decision_step(policy_step, acct: AccountCoeffs, k_sel, gains, pol_state,
         (blocked_total(_fit_account_axis(contrib, acct_len)),
          blocked_total(_fit_account_axis(pq, acct_len))))
     return sel, q, p, t_comm, power, jnp.sum(sel), pol_state
+
+
+def make_fused_decision(scfg: SchedulerConfig, co: DecisionCoeffs, *,
+                        block: Optional[int] = None,
+                        interpret: Optional[bool] = None):
+    """A :func:`decision_step` drop-in that serves the ``proposed`` policy
+    through the fused Pallas megakernel (``kernels/decision_fused.py``).
+
+    ``co`` is the caller's coefficient bundle — typically TRACED leaves
+    passed through the engine's jit boundary (the operand contract), which
+    the wrapper packs into the kernel's (14,) operand vector. The returned
+    callable has ``decision_step``'s exact signature; ``policy_step`` and
+    ``acct`` are accepted and ignored (the kernel owns the full decision,
+    and the accounting scalars ride in the operand vector), so engines can
+    swap it in at the decision layer without touching their policy wiring.
+
+    What stays stitched, and why it is still bitwise-equal to
+    ``decision_step`` + ``make_policy("proposed", coeffs=...)``:
+
+    * the selection uniforms are drawn here with
+      :func:`repro.core.policies.draw_selection_uniform` — the same draw,
+      key and dtype ``sample_selection`` performs inside the policy step;
+    * the guarantee-one fallback (global ``argmax(q)``) replays
+      ``selection_from_uniform``'s exact ops on the kernel's q;
+    * the comm-time/power summands are REFOLDED here from the fenced
+      (sel, q, p) with ``decision_step``'s exact expressions — not taken
+      from the kernel's per-lane outputs — because XLA CPU rounds the
+      scalar (width-1) ``log2`` one ulp apart from every vectorized
+      width, and the kernel always evaluates at block width while the
+      stitched oracle evaluates at N (N = 1 would diverge). The sharded
+      twin (``fl/client_shard.py::_sharded_proposed_fused``) makes the
+      same choice; the bucket-batched service consumes the kernel
+      summands directly, where widths are never 1.
+
+    ``valid`` doubles as the PR-6 population activity mask: the population
+    core passes ``valid=active``, and the kernel applies it BOTH as the
+    q -> 0 pre-selection mask and as the expected-power accounting mask —
+    the same two uses the stitched masked policy + ``decision_step``
+    make of it.
+    """
+    from repro.core.policies import PolicyState, draw_selection_uniform
+    from repro.kernels.decision_fused import (decision_fused,
+                                              pack_decision_operands)
+    ops = pack_decision_operands(co.solve, co.acct)
+    kw = {} if block is None else {"block": block}
+
+    def fused_decision(policy_step, acct, k_sel, gains, pol_state, *,
+                       valid=None, acct_len: Optional[int] = None):
+        del policy_step, acct  # the kernel IS the policy + accounting
+        u = draw_selection_uniform(k_sel, gains.shape[0])
+        sel_raw, q, p, z_new, _tc, _pq = decision_fused(
+            gains, pol_state.z, u, ops, active=valid, valid=valid,
+            interpret=interpret, **kw)
+        sel_raw, q, p, z_new = jax.lax.optimization_barrier(
+            (sel_raw, q, p, z_new))
+        if scfg.guarantee_one:
+            none = ~jnp.any(sel_raw)
+            forced = jnp.zeros_like(sel_raw).at[jnp.argmax(q)].set(True)
+            sel = jnp.where(none, forced, sel_raw)
+        else:
+            sel = sel_raw
+        rate = coeff_rate(gains, p, co.acct)
+        contrib = jnp.where(sel, co.acct.ell / jnp.maximum(rate, 1e-9), 0.0)
+        pq = p * q if valid is None else jnp.where(valid, p * q, 0.0)
+        t_comm, power = jax.lax.optimization_barrier(
+            (blocked_total(_fit_account_axis(contrib, acct_len)),
+             blocked_total(_fit_account_axis(pq, acct_len))))
+        st = PolicyState(z_new, pol_state.aux, pol_state.t + 1)
+        return sel, q, p, t_comm, power, jnp.sum(sel), st
+
+    return fused_decision

@@ -93,7 +93,11 @@ class SimConfig:
     uniform_m: float = 0.0       # matched M for the baseline policies
     seed: int = 0
     engine: str = "scan"         # scan (compiled chunks) | loop (legacy)
-    solver: str = "jnp"          # jnp closed form | pallas kernel
+    solver: str = "jnp"          # jnp closed form | pallas solve kernel |
+                                 # pallas_fused (the full-decision megakernel
+                                 # for policy="proposed"; other policies fall
+                                 # back to the stitched jnp path, which the
+                                 # fused path is bitwise-equal to)
     channel: str = "rayleigh"    # any repro.core.channel.CHANNEL_MODELS name
     channel_params: tuple = ()   # ((name, value), ...) model extras
     policy_params: tuple = ()    # ((name, value), ...) policy extras
@@ -167,7 +171,7 @@ def resolve_wire_dtype(name: str):
 
 
 def make_round_core(ds: FederatedDataset, sim: SimConfig,
-                    scfg: SchedulerConfig):
+                    scfg: SchedulerConfig, decision=None):
     """The channel/policy-agnostic round body shared by the scan engine and
     the shard_map grid.
 
@@ -187,6 +191,13 @@ def make_round_core(ds: FederatedDataset, sim: SimConfig,
     update (``fl/round.py::make_sharded_round_update``); 0 keeps the
     sequential ``lax.map`` path. The two are bitwise-equal at mesh size 1
     (tests/test_round_sharded.py documents the per-mesh contract).
+
+    ``decision`` swaps the decision layer itself (default
+    :func:`repro.fl.decision.decision_step`): ``solver="pallas_fused"``
+    passes the fused-megakernel drop-in built by
+    ``fl/decision.py::make_fused_decision``, which ignores ``policy_step``
+    and runs solve + selection + Eq. 9 + accounting in one Pallas pass —
+    bitwise-equal to the stitched default (tests/test_decision_fused.py).
     """
     n = ds.n_clients
     m_cap = sim.m_cap
@@ -208,6 +219,8 @@ def make_round_core(ds: FederatedDataset, sim: SimConfig,
             spec.loss_fn, sim.gamma, sim.local_steps, n,
             sim.participant_shards, aggregation=sim.aggregation,
             wire_dtype=wire)
+    if decision is None:
+        decision = decision_step
 
     def round_core(channel_step, policy_step, acct, params, pol_state,
                    ch_state, key):
@@ -217,7 +230,7 @@ def make_round_core(ds: FederatedDataset, sim: SimConfig,
         # scheduler service serves online, which is what the service's
         # bitwise-parity contract rests on.
         gains, ch_state = channel_obs(channel_step, k_ch, ch_state)
-        sel, q, p, t_comm, power, n_sel, pol_state = decision_step(
+        sel, q, p, t_comm, power, n_sel, pol_state = decision(
             policy_step, acct, k_sel, gains, pol_state)
         # pick up to m_cap participants (nonzero packs left)
         sel_idx, sel_valid = pack_participants(sel, m_cap)
@@ -246,12 +259,34 @@ def resolve_solve_fn(scfg: SchedulerConfig, ch: ChannelConfig, solver: str,
     """The engine's solve override: an explicit ``solve_fn`` wins, the
     Pallas kernel is built for ``solver="pallas"``, and ``None`` is
     returned for the jnp path — which then runs the coefficient-driven
-    ``solve_round_coeffs`` on the runtime bundle (the operand contract)."""
+    ``solve_round_coeffs`` on the runtime bundle (the operand contract).
+
+    ``"pallas_fused"`` also returns None: the megakernel replaces the
+    whole DECISION layer, not the solve closure, so any consumer that
+    only takes a solve function (sweeps, baseline policies, matched-M
+    estimation) runs the stitched jnp path — which the fused path is
+    bitwise-equal to, so nothing diverges."""
     if solve_fn is not None:
         return solve_fn
-    if solver == "jnp":
+    if solver in ("jnp", "pallas_fused"):
         return None
     return make_solve_fn(scfg, ch, solver)
+
+
+def resolve_fused_decision(sim: SimConfig, scfg: SchedulerConfig, co):
+    """``solver="pallas_fused"`` -> the megakernel decision drop-in, else
+    None (callers then keep :func:`repro.fl.decision.decision_step`).
+
+    Only ``policy="proposed"`` has a fused kernel; every other policy
+    silently keeps the stitched path — safe because the fused path is
+    bitwise-equal to it, so a policy grid mixing both stays coherent.
+    ``co`` may hold traced leaves (the engines call this inside jit with
+    the runtime bundle — the operand contract).
+    """
+    if sim.solver == "pallas_fused" and sim.policy == "proposed":
+        from repro.fl.decision import make_fused_decision
+        return make_fused_decision(scfg, co)
+    return None
 
 
 def make_sim_round(ds: FederatedDataset, sim: SimConfig,
@@ -288,7 +323,9 @@ def make_sim_round(ds: FederatedDataset, sim: SimConfig,
     policy_step = make_policy(sim.policy, scfg, ch, m_avg=sim.uniform_m,
                               solve_fn=solve, coeffs=co.solve,
                               **dict(sim.policy_params))
-    round_core = make_round_core(ds, sim, scfg)
+    round_core = make_round_core(ds, sim, scfg,
+                                 decision=resolve_fused_decision(sim, scfg,
+                                                                 co))
 
     def sim_round(params, pol_state, ch_state, key):
         return round_core(channel.step, policy_step, co.acct, params,

@@ -151,7 +151,7 @@ def active_count(active: jax.Array) -> jax.Array:
 # --------------------------------------------------------------------------
 
 def make_population_core(ds: FederatedDataset, sim, scfg: SchedulerConfig,
-                         pcfg: PopulationConfig):
+                         pcfg: PopulationConfig, decision=None):
     """The mask-threaded round body for the scan engine and the grid.
 
     Returns ``pop_core(channel_step, policy_step, acct, params, pol_state,
@@ -164,6 +164,13 @@ def make_population_core(ds: FederatedDataset, sim, scfg: SchedulerConfig,
     Order of events per round: churn -> channel obs -> masked decision
     (selection + Eq. 9 charge on the post-churn mask) -> straggler split ->
     training on the delivered participants only.
+
+    ``decision`` swaps the decision layer (default ``decision_step``);
+    ``solver="pallas_fused"`` passes the megakernel drop-in, whose
+    ``valid`` argument doubles as the activity mask — inside the kernel
+    it masks q -> 0 pre-selection AND the expected-power summand, the
+    same two uses the stitched masked policy makes of it. Failed lanes
+    stay charged either way: Eq. 9 takes no failure input.
     """
     n = ds.n_clients
     m_cap = sim.m_cap
@@ -181,6 +188,8 @@ def make_population_core(ds: FederatedDataset, sim, scfg: SchedulerConfig,
             spec.loss_fn, sim.gamma, sim.local_steps, n,
             sim.participant_shards, aggregation=sim.aggregation,
             wire_dtype=wire)
+    if decision is None:
+        decision = decision_step
 
     def pop_core(channel_step, policy_step, acct, params, pol_state, cst,
                  key):
@@ -196,7 +205,7 @@ def make_population_core(ds: FederatedDataset, sim, scfg: SchedulerConfig,
         # n_active); decision_step's valid hook keeps inactive lanes out
         # of the power accounting exactly like the service's pad lanes
         masked_step = lambda k, g, st: policy_step(k, g, st, active, n_act)  # noqa: E731
-        sel, q, p, t_comm, power, n_sel, pol_state = decision_step(
+        sel, q, p, t_comm, power, n_sel, pol_state = decision(
             masked_step, acct, k_sel, gains, pol_state, valid=active)
         # stragglers: selected-but-failed devices burned their TDMA slot
         # (t_comm and n_sel keep them) but deliver nothing downstream
@@ -227,7 +236,7 @@ def make_population_round(ds: FederatedDataset, sim, scfg: SchedulerConfig,
     """Bind :func:`make_population_core` to ``sim``'s channel + policy —
     the population twin of ``engine.make_sim_round``'s sequential path
     (``make_sim_round`` dispatches here when ``sim.population`` is set)."""
-    from repro.fl.engine import resolve_solve_fn
+    from repro.fl.engine import resolve_fused_decision, resolve_solve_fn
     pcfg = population_config(sim.population)
     co = coeffs if coeffs is not None else decision_coeffs(scfg, ch)
     solve = resolve_solve_fn(scfg, ch, sim.solver, solve_fn)
@@ -236,7 +245,10 @@ def make_population_round(ds: FederatedDataset, sim, scfg: SchedulerConfig,
     policy_step = make_policy(sim.policy, scfg, ch, m_avg=sim.uniform_m,
                               solve_fn=solve, coeffs=co.solve,
                               **dict(sim.policy_params))
-    pop_core = make_population_core(ds, sim, scfg, pcfg)
+    pop_core = make_population_core(ds, sim, scfg, pcfg,
+                                    decision=resolve_fused_decision(sim,
+                                                                    scfg,
+                                                                    co))
 
     def sim_round(params, pol_state, cst, key):
         return pop_core(channel.step, policy_step, co.acct, params,

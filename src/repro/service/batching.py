@@ -80,6 +80,13 @@ class SchedulerService:
     round-off. The default ``"jnp"`` path serves heterogeneous tenants
     from one compiled program per bucket and is bitwise-equal to
     ``run_simulation_scan``'s decisions (tests/test_service.py).
+
+    ``solver="pallas_fused"`` serves ``proposed`` buckets through the
+    bucket-batched fused decision megakernel
+    (``kernels/decision_fused.py``): every scalar is a runtime operand
+    row, so — unlike ``"pallas"`` — heterogeneous tenants still batch in
+    one program AND the full bitwise contract holds. Non-``proposed``
+    buckets fall back to the stitched jnp rows (identical results).
     """
 
     def __init__(self, solver: str = "jnp", log_requests: bool = True):
@@ -89,9 +96,9 @@ class SchedulerService:
         deployments should either disable it, or snapshot + prune
         ``self.log.flushes`` on their checkpoint cadence (replay needs
         the state snapshot taken at the log's first retained flush)."""
-        if solver not in ("jnp", "pallas"):
+        if solver not in ("jnp", "pallas", "pallas_fused"):
             raise ValueError(f"unknown solver {solver!r} "
-                             "(want 'jnp'|'pallas')")
+                             "(want 'jnp'|'pallas'|'pallas_fused')")
         self.solver = solver
         self.log_requests = log_requests
         self.store = TenantStore()
@@ -176,9 +183,11 @@ class SchedulerService:
             solve_fn = None
             if self.solver == "pallas":
                 solve_fn = self._pallas_solve(bkey, bucket)
+            fused = (self.solver == "pallas_fused"
+                     and bkey.policy == "proposed")
             self._steps[bkey] = make_bucket_step(
                 bkey.policy, bkey.n_bucket, bkey.acct_len,
-                bkey.guarantee_one, solve_fn=solve_fn)
+                bkey.guarantee_one, solve_fn=solve_fn, fused=fused)
         return self._steps[bkey]
 
     def _pallas_solve(self, bkey: BucketKey, bucket):

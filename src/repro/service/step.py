@@ -33,6 +33,15 @@ kernel static parameters must then be shared by the whole bucket, rows
 are mapped sequentially (``lax.map`` — pallas calls don't batch under
 vmap), and the contract is the kernel's usual float32-round-off match,
 not bitwise.
+
+``solver="pallas_fused"`` serves ``proposed`` buckets through the fused
+decision megakernel (``kernels/decision_fused.py``): because pallas
+calls don't batch under vmap, the kernel itself is NATIVELY bucket-
+batched — a (B, N/block) grid with one (14,) operand row per bucket
+slot — and only the cheap guarantee/accounting epilogue runs under
+``jit(vmap)``. Coefficients stay runtime operands, so heterogeneous
+tenants batch in one program (no homogeneity requirement, unlike
+``"pallas"``) and the served rows keep the full BITWISE contract.
 """
 
 from __future__ import annotations
@@ -125,7 +134,8 @@ _POLICY_CORES = {
 
 
 def make_bucket_step(policy: str, n_bucket: int, acct_len: int,
-                     guarantee_one: bool, solve_fn=None):
+                     guarantee_one: bool, solve_fn=None,
+                     fused: bool = False):
     """Build the jitted batched serving step for one bucket shape.
 
     Returns ``bucket_step(state, coeffs, acct, n_real, rows, gains, raw)
@@ -146,8 +156,20 @@ def make_bucket_step(policy: str, n_bucket: int, acct_len: int,
     One compiled program per (bucket, B) shape; batch sizes are padded to
     powers of two by the batcher, so the number of compilations stays
     logarithmic in the peak batch size.
+
+    ``fused=True`` (``proposed`` only) serves the whole batch through the
+    natively bucket-batched fused megakernel — solve + selection + Eq. 9
+    + accounting summands in one (B, n_bucket/block) grid — with the
+    guarantee-one fallback and the blocked accounting folds vmapped over
+    rows outside, replaying ``selection_from_uniform``'s and
+    ``decision_step``'s exact ops. Bitwise-equal to the default stitched
+    rows (tests/test_decision_fused.py); unlike ``solve_fn`` it needs no
+    bucket homogeneity, since every scalar rides the operand rows.
     """
     core = _POLICY_CORES[policy](guarantee_one, solve_fn)
+    if fused and policy != "proposed":
+        raise ValueError("fused=True needs policy='proposed' (the only "
+                         "policy with a fused decision kernel)")
 
     def one(raw_r, gains_r, st_r, c_r, a_r, nr):
         valid = jnp.arange(n_bucket, dtype=jnp.int32) < nr
@@ -155,13 +177,42 @@ def make_bucket_step(policy: str, n_bucket: int, acct_len: int,
         return decision_step(step, a_r, raw_r, gains_r, st_r,
                              valid=valid, acct_len=acct_len)
 
+    def fused_rows(raw, gains, st_rows, c_rows, a_rows, nr_rows):
+        from repro.fl.decision import _fit_account_axis
+        from repro.fl.sharding import blocked_total
+        from repro.kernels.decision_fused import (decision_fused_batched,
+                                                  pack_decision_operands)
+        ops = jax.vmap(pack_decision_operands)(c_rows, a_rows)  # (B, 14)
+        valid = (jnp.arange(n_bucket, dtype=jnp.int32)[None, :]
+                 < nr_rows[:, None])
+        sel_raw, q, p, z_new, tc, pq = jax.lax.optimization_barrier(
+            decision_fused_batched(gains, st_rows.z, raw, ops, valid=valid))
+
+        def finish(sel_r, q_r, tc_r, pq_r):
+            if guarantee_one:
+                none = ~jnp.any(sel_r)
+                forced = jnp.zeros_like(sel_r).at[jnp.argmax(q_r)].set(True)
+                sel_r = jnp.where(none, forced, sel_r)
+            contrib = jnp.where(sel_r, tc_r, 0.0)
+            t_comm, power = jax.lax.optimization_barrier(
+                (blocked_total(_fit_account_axis(contrib, acct_len)),
+                 blocked_total(_fit_account_axis(pq_r, acct_len))))
+            return sel_r, t_comm, power, jnp.sum(sel_r)
+
+        sel, t_comm, power, n_sel = jax.vmap(finish)(sel_raw, q, tc, pq)
+        st_new = PolicyState(z_new, st_rows.aux, st_rows.t + 1)
+        return sel, q, p, t_comm, power, n_sel, st_new
+
     @functools.partial(jax.jit, donate_argnums=(0,))
     def bucket_step(state, coeffs, acct, n_real, rows, gains, raw):
         st_rows = jax.tree.map(lambda a: a[rows], state)
         c_rows = jax.tree.map(lambda a: a[rows], coeffs)
         a_rows = jax.tree.map(lambda a: a[rows], acct)
         nr_rows = n_real[rows]
-        if solve_fn is None:
+        if fused:
+            sel, q, p, t_comm, power, n_sel, st_new = fused_rows(
+                raw, gains, st_rows, c_rows, a_rows, nr_rows)
+        elif solve_fn is None:
             sel, q, p, t_comm, power, n_sel, st_new = jax.vmap(one)(
                 raw, gains, st_rows, c_rows, a_rows, nr_rows)
         else:

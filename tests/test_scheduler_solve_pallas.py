@@ -21,6 +21,8 @@ from _hyp import given, settings, st
 from repro.core import ChannelConfig, SchedulerConfig, solve_round
 from repro.kernels.scheduler_solve import scheduler_solve
 
+pytestmark = pytest.mark.pallas  # nightly kernel-parity leg re-runs these
+
 BLOCK = 128  # non-default on purpose (kernel default is 1024)
 EDGE_SIZES = [1, BLOCK - 1, BLOCK, BLOCK + 1, 3 * BLOCK + 17]
 
