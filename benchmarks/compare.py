@@ -61,6 +61,8 @@ METRICS = {
     "service": {
         "scenarios.full.decisions_per_sec": "higher",
         "scenarios.batch64.p99_ms": "lower",
+        "scenarios.smallflush.p99_ms": "lower",
+        "scenarios.evict_churn.cycles_per_sec": "higher",
     },
     "kernels": {
         "solve.100000": "lower",

@@ -701,8 +701,18 @@ def bench_service(prof):
     V/lam/ell/Pmax and policy) and measures steady-state serving:
 
     * ``full`` — every tenant submits each round (throughput mode);
-    * ``batch64`` — random 64-tenant batches (latency mode);
-    * ``small100`` — a 100-tenant service, same mix (tenant-count axis).
+    * ``batch64`` — random 64-tenant batches (latency mode, after
+      ``warmup(64)``: the pre-PR-8 p99 here was ~458 ms — random subsets
+      split unevenly across buckets, so unseen power-of-two batch shapes
+      kept compiling mid-measurement);
+    * ``small100`` — a 100-tenant service, same mix (tenant-count axis);
+    * ``smallflush`` — 1-8 request flushes after ``warmup()`` (the
+      latency path: staged arenas + pre-compiled batch shapes — the
+      pre-warmup pathology was ~half-second p99 from mid-measurement
+      power-of-two shape compiles);
+    * ``evict_churn`` — LRU evict -> spill -> reload -> serve cycles
+      (tenant lifecycle: host row pull, bucket compaction +
+      re-materialization, readmission).
 
     JSON artifact: benchmarks/out/service.json. Latency is wall-clock per
     ``flush()`` (host batching + jit dispatch + device step + host slice),
@@ -711,7 +721,7 @@ def bench_service(prof):
     import jax  # noqa: F401  (ensures backend init outside the timing)
     from repro.service import SchedulerService
     from repro.service.demo import (DEFAULT_MIX, demo_request,
-                                    register_demo_tenants)
+                                    lifecycle_cycle, register_demo_tenants)
 
     rng = np.random.default_rng(0)
     mix = DEFAULT_MIX   # buckets 32 / 128 / 512, >= 1000 tenants
@@ -741,6 +751,7 @@ def bench_service(prof):
                        for n, c, p in mix],
                "flushes": flushes, "scenarios": {}}
     svc, tenants = build()
+    svc.warmup(max_batch=64)   # pre-compile every random-subset batch shape
     scenarios = [("full", svc, tenants, None),
                  ("batch64", svc, tenants, 64)]
     svc100, tenants100 = build(counts_scale=0.1)
@@ -762,6 +773,60 @@ def bench_service(prof):
         _emit(f"service_{label}", 1e6 * float(np.sum(walls)) / served,
               f"decisions_per_sec={dps:.0f};tenants={len(t)};"
               f"p50_ms={entry['p50_ms']:.1f};p99_ms={entry['p99_ms']:.1f}")
+
+    # smallflush: tiny (1-8 request) flushes against the FULL service —
+    # the interactive-latency path. warmup() pre-compiles every bucket's
+    # power-of-two batch shapes with all-sentinel batches (state bitwise
+    # untouched), so the measured p99 is steady-state staging + dispatch,
+    # not a mid-measurement shape compile.
+    svc.warmup(max_batch=8)
+    walls, served = [], 0
+    for _ in range(max(40, 4 * flushes)):
+        b = int(rng.integers(1, 9))
+        subset = [tenants[j] for j in rng.choice(len(tenants), b,
+                                                 replace=False)]
+        reqs = [demo_request(rng, *t) for t in subset]
+        t0 = time.time()
+        for name, gains, raw in reqs:
+            svc.submit(name, gains, raw=raw)
+        svc.flush(log=False)
+        walls.append(time.time() - t0)
+        served += b
+    walls_ms = np.sort(np.asarray(walls)) * 1e3
+    dps = served / float(np.sum(walls))
+    entry = {
+        "tenants": len(tenants), "requests": served, "flushes": len(walls),
+        "decisions_per_sec": dps,
+        "p50_ms": float(np.percentile(walls_ms, 50)),
+        "p99_ms": float(np.percentile(walls_ms, 99)),
+    }
+    results["scenarios"]["smallflush"] = entry
+    _emit("service_smallflush", 1e6 * float(np.sum(walls)) / served,
+          f"decisions_per_sec={dps:.0f};"
+          f"p50_ms={entry['p50_ms']:.2f};p99_ms={entry['p99_ms']:.2f}")
+
+    # evict_churn: full tenant-lifecycle cycles on the 100-tenant service
+    # (evict_lru -> spill -> reload -> serve one round). The jnp bucket
+    # steps are shape-polymorphic jit functions, so after the warm cycles
+    # the churn is pure host lifecycle work + one 1-row serve, no
+    # recompilation.
+    churn_rng = np.random.default_rng(3)
+    by_name = {nm: (n, p) for nm, n, p in tenants100}
+    for _ in range(3):
+        lifecycle_cycle(svc100, churn_rng, by_name)
+    n_cycles = max(10, flushes)
+    t0 = time.time()
+    for _ in range(n_cycles):
+        lifecycle_cycle(svc100, churn_rng, by_name)
+    wall = time.time() - t0
+    cps = n_cycles / wall
+    results["scenarios"]["evict_churn"] = {
+        "tenants": len(tenants100), "cycles": n_cycles,
+        "cycles_per_sec": cps,
+        "ms_per_cycle": 1e3 * wall / n_cycles,
+    }
+    _emit("service_evict_churn", 1e6 * wall / n_cycles,
+          f"cycles_per_sec={cps:.1f};tenants={len(tenants100)}")
     _dump("service", results)
     return results
 

@@ -13,7 +13,10 @@ The demo registers ~1000 heterogeneous tenants across three N-buckets,
 drives a simulated request stream, prints serving throughput/latency, and
 closes the loop on the service's operational contract: snapshot
 mid-stream, keep serving, then restore the snapshot into a FRESH service
-and replay the logged tail — every decision comes back bit-identical.
+and replay the logged tail — every decision comes back bit-identical. It
+then exercises the tenant lifecycle: evict the LRU tenant (state spilled
+through the checkpoint substrate), reload it bitwise, and compact the
+replay log against a snapshot so host memory stays bounded.
 
     PYTHONPATH=src python examples/scheduler_service.py
 """
@@ -23,7 +26,8 @@ import time
 import numpy as np
 
 from repro.service import RequestLog, SchedulerService
-from repro.service.demo import demo_request, register_demo_tenants
+from repro.service.demo import (demo_request, lifecycle_cycle,
+                                register_demo_tenants)
 
 ROUNDS = 6
 
@@ -45,13 +49,15 @@ def main():
           f"{sorted({k.n_bucket for k in svc.store.buckets()})} "
           f"(policies: proposed + uniform)")
 
+    svc.warmup()    # pre-compile batch shapes: no serving-path spikes
     snap_at = ROUNDS // 2
-    snapshot = None
+    snapshot, log_mark = None, 0
     stream_rng = np.random.default_rng(1)
     walls = []
     for r in range(ROUNDS):
         if r == snap_at:
             snapshot = svc.snapshot()       # mid-stream checkpoint
+            log_mark = len(svc.log)         # replay tail starts here
         reqs = one_round_requests(stream_rng, tenants)
         t0 = time.time()
         for name, gains, raw in reqs:
@@ -79,15 +85,33 @@ def main():
     svc2, _ = build_service(np.random.default_rng(0))   # same tenants
     svc2.restore(snapshot)
     tail = RequestLog()
-    tail.flushes = svc.log.flushes[snap_at:]
+    tail.entries = svc.log.entries[log_mark:]   # one entry per serve group
     replayed = tail.replay(svc2)
     last_live = {n: svc.tenant_state(n) for n, _, _ in tenants[:50]}
     ok = all(
         np.array_equal(last_live[n].z, svc2.tenant_state(n).z)
         for n in last_live)
     print(f"replayed {tail.n_requests} logged requests "
-          f"({len(replayed)} flushes) from the mid-stream snapshot: "
+          f"({len(replayed)} serve groups) from the mid-stream snapshot: "
           f"queues bit-identical = {ok}")
+
+    # --- tenant lifecycle: evict/spill -> reload -> serve, bitwise ------
+    by_name = {nm: (n, p) for nm, n, p in tenants}
+    victim = tenants[0][0]
+    z_live = svc.tenant_state(victim).z.copy()
+    svc.evict(victim)                           # spill + bucket compaction
+    svc.reload(victim)
+    same = np.array_equal(z_live, svc.tenant_state(victim).z)
+    print(f"evicted + reloaded tenant {victim!r}: "
+          f"queues bit-identical = {same}")
+    cycled = lifecycle_cycle(svc, stream_rng, by_name)
+    print(f"full churn cycle (evict_lru -> reload -> serve) on {cycled!r}")
+
+    # --- bounded replay log: compact against a snapshot -----------------
+    n_before = len(svc.log)
+    svc.compact_log()
+    print(f"compact_log(): {n_before} entries -> {len(svc.log)} "
+          f"(snapshot rides in the log; replay stays bit-exact)")
 
 
 if __name__ == "__main__":

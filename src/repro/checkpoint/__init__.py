@@ -1,3 +1,3 @@
-from repro.checkpoint.io import load_pytree, save_pytree
+from repro.checkpoint.io import load_pytree, save_pytree, tree_template
 
-__all__ = ["load_pytree", "save_pytree"]
+__all__ = ["load_pytree", "save_pytree", "tree_template"]

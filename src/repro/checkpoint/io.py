@@ -25,6 +25,23 @@ import numpy as np
 PyTree = Any
 
 
+def tree_template(tree: PyTree) -> PyTree:
+    """Shape/dtype skeleton of a pytree: ``jax.ShapeDtypeStruct`` leaves.
+
+    A ``load_pytree`` template that materializes nothing — device arrays
+    contribute only their metadata (no host transfer), which is how the
+    scheduler service builds restore/spill-reload templates for tenant
+    state without a throwaway host copy of every bucket.
+    """
+    def spec(x):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            return jax.ShapeDtypeStruct(tuple(x.shape), x.dtype)
+        a = np.asarray(x)
+        return jax.ShapeDtypeStruct(a.shape, a.dtype)
+
+    return jax.tree.map(spec, tree)
+
+
 def _flatten(tree) -> dict:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:

@@ -1,38 +1,62 @@
-"""Request batching + the multi-tenant ``SchedulerService`` facade.
+"""Continuous batching + the multi-tenant ``SchedulerService`` facade.
 
 Requests carry instantaneous gains (the paper's only per-round input) and
-the policy's raw selection draws. ``flush()`` groups the queued requests
-into their tenants' buckets, pads each bucket's batch to a power-of-two
-row count, and serves every bucket with ONE ``jit(vmap)`` step per bucket
-shape (``repro/service/step.py``) — donated state, no per-tenant
-dispatch. Multiple requests for one tenant in a single flush are served
-in submission order across consecutive *waves* (a wave touches each
-tenant at most once, so state updates never race).
+the policy's raw selection draws. ``submit()`` ADMITS a request straight
+into its bucket's pre-allocated staging arena — one ``np.ndarray`` slot
+write per request, no per-request ``np.full`` allocation — and assigns it
+to a *wave* (a wave touches each tenant at most once, so state updates
+never race; a tenant submitted k times spans k waves). ``flush()`` then
+serves one *group* per (wave, bucket): each group is one ``jit(vmap)``
+bucket step (``repro/service/step.py``) over the arena's padded batch —
+donated state, no per-tenant dispatch. Groups are dispatched back to
+back WITHOUT pulling results (JAX async dispatch), so host-side staging
+and dispatch of group k overlap device compute of group k-1; results are
+pulled once, after every group is in flight.
 
 The batch row axis pads with sentinel rows (row index = T): the gather
 clamps them onto an arbitrary real tenant's inputs (garbage compute,
 discarded) and the scatter drops their state writes — pad rows can never
-alter a real tenant's bits, which the padding-hygiene test pins.
+alter a real tenant's bits, which the padding-hygiene test pins. The
+staged path builds bit-identical batch arrays to the legacy
+pad-per-request path (``staging=False``, kept as the parity reference),
+so both run the same compiled programs on the same inputs
+(tests/test_service.py).
 
-Every flush is appended to an in-memory :class:`~repro.service.replay.
-RequestLog`; replaying a log from the starting snapshot reproduces every
-response bit for bit (the service is deterministic: all randomness
-arrives with the requests).
+Replay-log failure atomicity: each group is appended to the
+:class:`~repro.service.replay.RequestLog` immediately after its state
+scatter is dispatched. A ``flush()`` that raises partway therefore leaves
+the log holding exactly the groups whose queue updates happened — replay
+from the last snapshot reproduces the live state bit for bit even across
+the failure (the remaining queued requests are dropped). Replaying a log
+from the starting snapshot reproduces every response bit for bit (the
+service is deterministic: all randomness arrives with the requests).
+
+Tenant lifecycle: ``evict(name)`` spills a tenant's padded state row
+through the checkpoint substrate (``spill_dir``; in-memory otherwise)
+and compacts its bucket; ``reload(name)`` — or a ``submit`` to a spilled
+tenant — re-admits it with bitwise-identical queues. ``evict_lru()``
+picks the least-recently-used resident. ``compact_log()`` snapshots
+state and drops the served log entries, bounding host memory while
+keeping replay bit-exact.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, NamedTuple
+import os
+import re
+from typing import Dict, List, NamedTuple, Optional
 
 import jax
 import numpy as np
 
+from repro.checkpoint.io import load_pytree, save_pytree
 from repro.core.channel import ChannelConfig
-from repro.core.policies import POLICY_DRAWS
+from repro.core.policies import POLICY_DRAWS, PolicyState
 from repro.core.scheduler import SchedulerConfig
 from repro.fl.client_shard import POLICY_RAW_PAD
 from repro.service.replay import LoggedRequest, RequestLog
-from repro.service.state import BucketKey, TenantSpec, TenantStore
+from repro.service.state import (BucketKey, TenantSpec, TenantStore,
+                                 bucket_width)
 from repro.service.step import make_bucket_step
 
 GAINS_PAD = 0.0  # below every clipped channel gain (gain_bounds lo > 0)
@@ -55,6 +79,15 @@ class _Pending(NamedTuple):
     raw: object
 
 
+class _RawProto(NamedTuple):
+    """One policy's raw-draw layout: treedef + per-leaf kind/dtype/fill."""
+
+    treedef: object
+    scalar: tuple      # per leaf: True if a per-request scalar (no lane axis)
+    dtypes: tuple
+    fills: tuple       # per-lane pad fill per leaf (POLICY_RAW_PAD)
+
+
 def _next_pow2(n: int) -> int:
     return 1 << max(0, int(n) - 1).bit_length()
 
@@ -63,6 +96,94 @@ def _pad_lane(x: np.ndarray, width: int, fill) -> np.ndarray:
     out = np.full((width,), fill, x.dtype)
     out[: x.shape[0]] = x
     return out
+
+
+class _Stage:
+    """Pre-allocated staging arenas for one bucket within one wave.
+
+    Admission writes each request into arena slot ``count`` (a slice
+    write into pinned host buffers — the per-request cost the old
+    pad-per-flush path paid as fresh ``np.full`` allocations + stacks);
+    dispatch takes one bulk copy of the active ``[:b_pad]`` slice (so
+    arena reuse can never alias an in-flight async computation). Arenas
+    grow by doubling and are pooled per bucket across flushes.
+    """
+
+    def __init__(self, bkey: BucketKey, proto: _RawProto, cap: int = 8):
+        self.bkey = bkey
+        self.proto = proto
+        self.cap = 0
+        self.count = 0
+        self.rows: Optional[np.ndarray] = None
+        self.gains: Optional[np.ndarray] = None
+        self.raw: List[np.ndarray] = []
+        self._grow(cap)
+
+    def _grow(self, cap: int) -> None:
+        nb = self.bkey.n_bucket
+
+        def bigger(old, shape, dtype):
+            new = np.zeros(shape, dtype)
+            if old is not None:
+                new[: old.shape[0]] = old
+            return new
+
+        self.rows = bigger(self.rows, (cap,), np.int32)
+        self.gains = bigger(self.gains, (cap, nb), np.float32)
+        old = self.raw or [None] * len(self.proto.scalar)
+        self.raw = [bigger(a, (cap,) if s else (cap, nb), d)
+                    for a, s, d in zip(old, self.proto.scalar,
+                                       self.proto.dtypes)]
+        self.cap = cap
+
+    def put(self, n: int, gains: np.ndarray, raw_leaves) -> None:
+        """Admit one request: slot writes only, no allocation."""
+        if self.count == self.cap:
+            self._grow(self.cap * 2)
+        i = self.count
+        g = self.gains[i]
+        g[:n] = gains
+        g[n:] = GAINS_PAD
+        for arena, leaf, scalar, fill in zip(self.raw, raw_leaves,
+                                             self.proto.scalar,
+                                             self.proto.fills):
+            if scalar:
+                arena[i] = leaf
+            else:
+                a = arena[i]
+                a[:n] = leaf
+                a[n:] = fill
+        self.count += 1
+
+    def batch(self, rows: List[int], sentinel: int, b_pad: int):
+        """The padded (rows, gains, raw) batch for dispatch (bulk copies
+        of the active slice; sentinel slots zeroed — their payloads are
+        discarded anyway, but zeros keep them finite and reproducible)."""
+        c = self.count
+        if b_pad > self.cap:
+            self._grow(b_pad)
+        self.rows[:c] = rows
+        self.rows[c:b_pad] = sentinel
+        self.gains[c:b_pad] = 0.0
+        for arena in self.raw:
+            arena[c:b_pad] = 0
+        return (self.rows[:b_pad].copy(), self.gains[:b_pad].copy(),
+                jax.tree.unflatten(self.proto.treedef,
+                                   [a[:b_pad].copy() for a in self.raw]))
+
+    def reset(self) -> None:
+        self.count = 0
+
+
+class _Wave:
+    """One serving wave: each tenant at most once, grouped per bucket."""
+
+    __slots__ = ("seen", "groups", "stages")
+
+    def __init__(self):
+        self.seen: set = set()
+        self.groups: Dict[BucketKey, List[_Pending]] = {}
+        self.stages: Dict[BucketKey, _Stage] = {}
 
 
 class SchedulerService:
@@ -89,94 +210,205 @@ class SchedulerService:
     buckets fall back to the stitched jnp rows (identical results).
     """
 
-    def __init__(self, solver: str = "jnp", log_requests: bool = True):
-        """``log_requests=False`` disables the replay log entirely: the
-        log retains every request's gains/raws on the host, which at
-        production rates is unbounded memory growth — long-running
-        deployments should either disable it, or snapshot + prune
-        ``self.log.flushes`` on their checkpoint cadence (replay needs
-        the state snapshot taken at the log's first retained flush)."""
+    def __init__(self, solver: str = "jnp", log_requests: bool = True,
+                 staging: bool = True, spill_dir: Optional[str] = None):
+        """``log_requests=False`` disables the replay log entirely;
+        deployments that keep it should call :meth:`compact_log` on their
+        checkpoint cadence — compaction records the snapshot in the log,
+        so replay stays bit-exact while host memory stays bounded.
+
+        ``staging=False`` falls back to the legacy pad-per-request batch
+        build (one ``np.full`` + stack per request) — kept as the bitwise
+        parity reference for the staged arenas, not for production use.
+
+        ``spill_dir`` routes :meth:`evict` state spills through the
+        checkpoint substrate on disk; by default spilled rows stay on the
+        host heap."""
         if solver not in ("jnp", "pallas", "pallas_fused"):
             raise ValueError(f"unknown solver {solver!r} "
                              "(want 'jnp'|'pallas'|'pallas_fused')")
         self.solver = solver
         self.log_requests = log_requests
+        self.staging = staging
+        self.spill_dir = spill_dir
         self.store = TenantStore()
         self.log = RequestLog()
-        self._queue: List[_Pending] = []
+        self._waves: List[_Wave] = []
         self._steps: Dict[BucketKey, object] = {}
+        self._pool: Dict[BucketKey, List[_Stage]] = {}
+        self._protos: Dict[str, _RawProto] = {}
+        self._spilled: Dict[str, tuple] = {}   # name -> (spec, row | path)
+        self._spill_seq = 0
+        self._tick = 0
+        self._last_used: Dict[str, int] = {}
 
     # ------------------------------------------------------------ tenants
     def add_tenant(self, name: str, scfg: SchedulerConfig,
                    ch: ChannelConfig, policy: str = "proposed",
                    m_avg: float = 0.0) -> TenantSpec:
+        if name in self._spilled:
+            raise ValueError(f"tenant {name!r} is evicted (spilled); "
+                             "reload() it instead of re-registering")
         spec = self.store.add(TenantSpec(name=name, scfg=scfg, ch=ch,
                                          policy=policy, m_avg=m_avg))
-        # Rebuild the bucket's step: required for pallas (its solve_fn is
-        # rebuilt against the new tenant set's homogeneity); harmless for
-        # jnp (the grown state shape misses the old jit cache either way).
-        self._steps.pop(spec.bucket, None)
+        self._invalidate_step(spec.bucket)
+        self._touch(name)
         return spec
+
+    def _invalidate_step(self, bkey: BucketKey) -> None:
+        """Drop a bucket's cached step if tenant-set changes can affect
+        it. Only ``solver='pallas'`` bakes the tenant set into the step
+        (its solve_fn is built against the bucket's configuration
+        homogeneity); the jnp/fused steps take every per-tenant quantity
+        as runtime operands, so the SAME jit function serves any tenant
+        count — keeping it preserves the compiled (T, batch)-shape
+        variants across evict/reload churn and across admissions."""
+        if self.solver == "pallas":
+            self._steps.pop(bkey, None)
 
     def raw_structure(self, name: str):
         """An example raw-draw pytree for this tenant (log loading)."""
         spec = self.store.spec(name)
         return POLICY_DRAWS[spec.policy](jax.random.PRNGKey(0), spec.n)
 
+    def _proto(self, policy: str) -> _RawProto:
+        if policy not in self._protos:
+            example = POLICY_DRAWS[policy](jax.random.PRNGKey(0), 4)
+            leaves, treedef = jax.tree.flatten(example)
+            fills = treedef.flatten_up_to(POLICY_RAW_PAD[policy])
+            self._protos[policy] = _RawProto(
+                treedef=treedef,
+                scalar=tuple(np.ndim(x) == 0 for x in leaves),
+                dtypes=tuple(np.asarray(x).dtype for x in leaves),
+                fills=tuple(fills))
+        return self._protos[policy]
+
+    def _touch(self, name: str) -> None:
+        self._last_used[name] = self._tick
+        self._tick += 1
+
     # ------------------------------------------------------------ serving
     def submit(self, name: str, gains, raw=None, key=None) -> None:
         """Queue one round's scheduling request for a tenant.
 
-        ``gains`` are the tenant's instantaneous channel gains (positive,
-        shape (N,)). Exactly one of ``raw`` (the policy's pre-drawn raw
-        selection draws, ``POLICY_DRAWS`` layout) or ``key`` (a PRNG key
-        the service draws them from — the same split the engines use)
-        must be given.
+        ``gains`` are the tenant's instantaneous channel gains (finite
+        and positive, shape (N,)). Exactly one of ``raw`` (the policy's
+        pre-drawn raw selection draws, ``POLICY_DRAWS`` layout) or ``key``
+        (a PRNG key the service draws them from — the same split the
+        engines use) must be given. Submitting to an evicted tenant
+        reloads it first.
         """
+        if name in self._spilled:
+            self.reload(name)
         spec = self.store.spec(name)
         gains = np.asarray(gains, np.float32)
         if gains.shape != (spec.n,):
             raise ValueError(f"tenant {name!r} expects gains of shape "
                              f"({spec.n},), got {gains.shape}")
-        if not np.all(gains > 0.0):
-            # every channel model emits gains clipped >= gain_bounds()[0]
-            # > 0; non-positive gains would tie greedy's threshold with
-            # the 0.0 pad fill (pad lanes selected) and divide by zero in
-            # the Theorem-2 solve
-            raise ValueError(f"tenant {name!r} gains must be positive "
-                             "(channel gains are clipped above 0)")
+        if not np.all(np.isfinite(gains)) or not np.all(gains > 0.0):
+            # every channel model emits gains clipped into a finite
+            # positive band (gain_bounds); non-positive gains would tie
+            # greedy's threshold with the 0.0 pad fill (pad lanes
+            # selected) and divide by zero in the Theorem-2 solve, while
+            # +inf poisons the solve's log2 SNR and NaN-contaminates the
+            # shared bucket batch
+            raise ValueError(f"tenant {name!r} gains must be finite and "
+                             "positive (channel gains are clipped into a "
+                             "finite band above 0)")
         if (raw is None) == (key is None):
             raise ValueError("pass exactly one of raw= or key=")
         if raw is None:
             raw = POLICY_DRAWS[spec.policy](key, spec.n)
         raw = jax.tree.map(np.asarray, raw)
-        self._queue.append(_Pending(name, gains, raw))
+        proto = self._proto(spec.policy)
+        if jax.tree.structure(raw) != proto.treedef:
+            raise ValueError(
+                f"tenant {name!r} raw draws do not match the "
+                f"{spec.policy!r} POLICY_DRAWS layout")
+        bkey = spec.bucket
+        wave = next((w for w in self._waves if name not in w.seen), None)
+        if wave is None:
+            wave = _Wave()
+            self._waves.append(wave)
+        wave.seen.add(name)
+        wave.groups.setdefault(bkey, []).append(_Pending(name, gains, raw))
+        if self.staging:
+            stage = wave.stages.get(bkey)
+            if stage is None:
+                pool = self._pool.get(bkey)
+                stage = pool.pop() if pool else _Stage(bkey, proto)
+                wave.stages[bkey] = stage
+            stage.put(spec.n, gains, jax.tree.leaves(raw))
+        self._touch(name)
+
+    @property
+    def n_queued(self) -> int:
+        return sum(len(g) for w in self._waves for g in w.groups.values())
 
     def flush(self, log: bool = True) -> Dict[str, Decision]:
         """Serve every queued request; return ``{tenant: Decision}``.
 
-        A tenant submitted k times in one flush is served k times, in
-        order (k waves); the returned dict carries its LAST decision. The
-        flush is appended to the replay log only AFTER it fully serves —
-        a flush that raises logs nothing (the log must contain exactly
-        the requests whose queue updates happened, or replay diverges);
-        its requests are dropped from the queue, and queue state may have
-        advanced for the waves that completed.
+        A tenant submitted k times is served k times, in order (k waves);
+        the returned dict carries its LAST decision. Serve groups — one
+        bucket's batch within one wave — are dispatched without pulling
+        results, so staging/dispatch of group k overlaps device compute
+        of group k-1; each group is appended to the replay log right
+        after its dispatch, which makes the log FAILURE-ATOMIC: a flush
+        that raises partway has logged exactly the groups whose queue
+        updates happened (the not-yet-served requests are dropped), so
+        replay from the last snapshot reproduces the live state bit for
+        bit even across the failure.
         """
-        requests, self._queue = self._queue, []
+        waves, self._waves = self._waves, []
+        pending = []
+        try:
+            for w in waves:
+                for bkey, reqs in w.groups.items():
+                    outs = self._dispatch_group(bkey, reqs,
+                                                w.stages.get(bkey))
+                    if log and self.log_requests:
+                        self.log.append_entry(
+                            [LoggedRequest(*r) for r in reqs])
+                    pending.append((reqs, outs))
+        finally:
+            for w in waves:
+                for bkey, stage in w.stages.items():
+                    stage.reset()
+                    self._pool.setdefault(bkey, []).append(stage)
         responses: Dict[str, Decision] = {}
-        pending = requests
-        while pending:
-            wave, seen, rest = [], set(), []
-            for r in pending:
-                (rest if r.tenant in seen else wave).append(r)
-                seen.add(r.tenant)
-            responses.update(self._serve_wave(wave))
-            pending = rest
-        if log and self.log_requests and requests:
-            self.log.append_flush(
-                [LoggedRequest(*r) for r in requests])
+        for reqs, (sel, q, p, t_comm, power, n_sel) in pending:
+            sel, q, p = np.asarray(sel), np.asarray(q), np.asarray(p)
+            t_comm, power = np.asarray(t_comm), np.asarray(power)
+            n_sel = np.asarray(n_sel)
+            for i, r in enumerate(reqs):
+                n = self.store.spec(r.tenant).n
+                responses[r.tenant] = Decision(
+                    sel=sel[i, :n], q=q[i, :n], p=p[i, :n],
+                    t_comm=t_comm[i], power=power[i],
+                    n_sel=np.int64(n_sel[i]))
         return responses
+
+    def warmup(self, max_batch: int = 8) -> None:
+        """Pre-compile every bucket's step for all power-of-two batch
+        shapes up to ``max_batch`` by serving all-sentinel batches (the
+        scatter drops every row, so tenant state is bitwise-untouched).
+        Moves the compile spikes out of the serving path: small-flush p99
+        becomes steady-state instead of a first-shape compilation."""
+        for bkey, bucket in self.store.buckets().items():
+            step = self._bucket_step(bkey, bucket)
+            proto = self._proto(bkey.policy)
+            b = 1
+            while b <= _next_pow2(max_batch):
+                rows = np.full((b,), bucket.size, np.int32)
+                gains = np.zeros((b, bkey.n_bucket), np.float32)
+                raw = jax.tree.unflatten(proto.treedef, [
+                    np.zeros((b,) if s else (b, bkey.n_bucket), d)
+                    for s, d in zip(proto.scalar, proto.dtypes)])
+                out = step(bucket.state, bucket.coeffs, bucket.acct,
+                           bucket.n_real, rows, gains, raw)
+                bucket.state = out[-1]
+                b *= 2
+            jax.block_until_ready(bucket.state.z)
 
     def _bucket_step(self, bkey: BucketKey, bucket):
         if bkey not in self._steps:
@@ -203,46 +435,111 @@ class SchedulerService:
         return make_solve_fn(scfg, ch, "pallas",
                              block=min(1024, bkey.n_bucket))
 
-    def _serve_wave(self, wave: List[_Pending]) -> Dict[str, Decision]:
-        by_bucket: Dict[BucketKey, List[_Pending]] = {}
-        for r in wave:
-            by_bucket.setdefault(self.store.spec(r.tenant).bucket,
-                                 []).append(r)
-        out: Dict[str, Decision] = {}
-        buckets = self.store.buckets()
-        for bkey, reqs in by_bucket.items():
-            bucket = buckets[bkey]
-            step = self._bucket_step(bkey, bucket)
-            b_pad = _next_pow2(len(reqs))
-            nb = bkey.n_bucket
-            rows = np.full((b_pad,), bucket.size, np.int32)  # pad: dropped
-            gains = np.zeros((b_pad, nb), np.float32)
-            raw_rows = []
-            fills = POLICY_RAW_PAD[bkey.policy]
-            for i, r in enumerate(reqs):
-                rows[i] = self.store.row(r.tenant)
-                gains[i] = _pad_lane(r.gains, nb, GAINS_PAD)
-                raw_rows.append(jax.tree.map(
-                    lambda x, f: x if np.ndim(x) == 0
-                    else _pad_lane(np.asarray(x), nb, f), r.raw, fills))
-            for _ in range(b_pad - len(reqs)):   # sentinel-row payloads
-                raw_rows.append(jax.tree.map(
-                    lambda x: np.zeros_like(np.asarray(x)), raw_rows[0]))
-            raw = jax.tree.map(lambda *xs: np.stack(xs), *raw_rows)
-            sel, q, p, t_comm, power, n_sel, new_state = step(
-                bucket.state, bucket.coeffs, bucket.acct, bucket.n_real,
-                rows, gains, raw)
-            bucket.state = new_state      # old buffers were donated
-            sel, q, p = np.asarray(sel), np.asarray(q), np.asarray(p)
-            t_comm, power = np.asarray(t_comm), np.asarray(power)
-            n_sel = np.asarray(n_sel)
-            for i, r in enumerate(reqs):
-                n = self.store.spec(r.tenant).n
-                out[r.tenant] = Decision(
-                    sel=sel[i, :n], q=q[i, :n], p=p[i, :n],
-                    t_comm=t_comm[i], power=power[i],
-                    n_sel=np.int64(n_sel[i]))
+    def _dispatch_group(self, bkey: BucketKey, reqs: List[_Pending],
+                        stage: Optional[_Stage]):
+        """Dispatch one (wave, bucket) group; returns device outputs
+        WITHOUT pulling them (async — the next group's host staging
+        overlaps this group's device compute)."""
+        bucket = self.store.buckets()[bkey]
+        step = self._bucket_step(bkey, bucket)
+        b_pad = _next_pow2(len(reqs))
+        row_ids = [self.store.row(r.tenant) for r in reqs]
+        if stage is not None:
+            rows, gains, raw = stage.batch(row_ids, bucket.size, b_pad)
+        else:
+            rows, gains, raw = self._legacy_batch(bkey, bucket, reqs,
+                                                  row_ids, b_pad)
+        sel, q, p, t_comm, power, n_sel, new_state = step(
+            bucket.state, bucket.coeffs, bucket.acct, bucket.n_real,
+            rows, gains, raw)
+        bucket.state = new_state      # old buffers were donated
+        return sel, q, p, t_comm, power, n_sel
+
+    def _legacy_batch(self, bkey: BucketKey, bucket, reqs, row_ids,
+                      b_pad: int):
+        """The PR-5 pad-per-request batch build (one ``np.full`` + tree
+        map per request, stacked per flush) — the staged arenas' bitwise
+        parity reference (tests/test_service.py)."""
+        nb = bkey.n_bucket
+        rows = np.full((b_pad,), bucket.size, np.int32)  # pad: dropped
+        gains = np.zeros((b_pad, nb), np.float32)
+        raw_rows = []
+        fills = POLICY_RAW_PAD[bkey.policy]
+        for i, r in enumerate(reqs):
+            rows[i] = row_ids[i]
+            gains[i] = _pad_lane(r.gains, nb, GAINS_PAD)
+            raw_rows.append(jax.tree.map(
+                lambda x, f: x if np.ndim(x) == 0
+                else _pad_lane(np.asarray(x), nb, f), r.raw, fills))
+        for _ in range(b_pad - len(reqs)):   # sentinel-row payloads
+            raw_rows.append(jax.tree.map(
+                lambda x: np.zeros_like(np.asarray(x)), raw_rows[0]))
+        raw = jax.tree.map(lambda *xs: np.stack(xs), *raw_rows)
+        return rows, gains, raw
+
+    # --------------------------------------------------- tenant lifecycle
+    def evict(self, name: str):
+        """Spill ``name``'s state row through the checkpoint substrate
+        and compact its bucket. The tenant stays known to the service
+        (``reload`` or a ``submit`` re-admits it, bitwise); its decisions
+        after reload are identical to never having been evicted."""
+        for w in self._waves:
+            if name in w.seen:
+                raise ValueError(f"tenant {name!r} has queued requests; "
+                                 "flush() before evicting")
+        spec = self.store.spec(name)
+        row = self.store.evict(name)
+        self._invalidate_step(spec.bucket)
+        self._last_used.pop(name, None)
+        if self.spill_dir is not None:
+            fname = re.sub(r"[^\w.-]", "_", name)
+            path = os.path.join(self.spill_dir,
+                                f"spill-{self._spill_seq}-{fname}.npz")
+            self._spill_seq += 1
+            save_pytree(path, row)
+            self._spilled[name] = (spec, path)
+        else:
+            self._spilled[name] = (spec, row)
+        return row
+
+    def reload(self, name: str) -> TenantSpec:
+        """Re-admit an evicted tenant with bitwise-identical queues."""
+        if name not in self._spilled:
+            raise KeyError(f"tenant {name!r} is not spilled")
+        spec, ref = self._spilled.pop(name)
+        if isinstance(ref, str):
+            nb = bucket_width(spec.n)
+            template = PolicyState(
+                z=jax.ShapeDtypeStruct((nb,), np.float32),
+                aux=jax.ShapeDtypeStruct((nb,), np.float32),
+                t=jax.ShapeDtypeStruct((), np.int32))
+            row = jax.tree.map(np.asarray, load_pytree(ref, template))
+            os.remove(ref)
+        else:
+            row = ref
+        out = self.store.readmit(spec, row)
+        self._invalidate_step(spec.bucket)
+        self._touch(name)
         return out
+
+    def evict_lru(self) -> str:
+        """Evict the least-recently-used resident tenant; returns its
+        name. Tenants with queued requests are never candidates."""
+        staged: set = set()
+        for w in self._waves:
+            staged |= w.seen
+        cands = [n for n in self.store.tenants if n not in staged]
+        if not cands:
+            raise ValueError("no evictable tenant (none resident, or all "
+                             "have queued requests)")
+        name = min(cands, key=lambda n: self._last_used.get(n, -1))
+        self.evict(name)
+        return name
+
+    @property
+    def spilled(self) -> tuple:
+        """Names of currently-evicted (spilled) tenants."""
+        return tuple(self._spilled)
 
     # --------------------------------------------------- state management
     def tenant_state(self, name: str):
@@ -259,3 +556,17 @@ class SchedulerService:
 
     def load(self, path: str) -> None:
         self.store.load(path)
+
+    def compact_log(self):
+        """Snapshot the current state and compact the replay log against
+        it: served entries are dropped, the snapshot rides in the log,
+        and ``log.replay`` of the compacted log bit-exactly reproduces
+        what replaying the full log would have (tests/test_service.py).
+        Call on the checkpoint cadence to bound host memory. Returns the
+        snapshot."""
+        if self._waves:
+            raise ValueError("flush() before compacting the log "
+                             "(queued requests are not yet in it)")
+        snap = self.snapshot()
+        self.log.compact(snap)
+        return snap

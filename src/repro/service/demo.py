@@ -40,6 +40,21 @@ def register_demo_tenants(svc, rng: np.random.Generator, mix=DEFAULT_MIX,
     return tenants
 
 
+def lifecycle_cycle(svc, rng: np.random.Generator, by_name):
+    """One tenant-lifecycle churn cycle: evict the least-recently-used
+    resident, reload it through the spill substrate (bitwise), then serve
+    it one round. ``by_name`` maps tenant name -> ``(n, policy)`` (from
+    :func:`register_demo_tenants`'s list). Shared by the demo and
+    ``bench_service``'s eviction-churn leg; returns the cycled name."""
+    name = svc.evict_lru()
+    svc.reload(name)
+    n, policy = by_name[name]
+    _, gains, raw = demo_request(rng, name, n, policy)
+    svc.submit(name, gains, raw=raw)
+    svc.flush(log=False)
+    return name
+
+
 def demo_request(rng: np.random.Generator, name: str, n: int, policy: str):
     """One round's request payload: Rayleigh-ish measured gains (clipped
     positive, as every channel model guarantees) + the policy's raw

@@ -1,4 +1,4 @@
-"""Append-only request log with bit-exact re-execution.
+"""Append-only request log with bit-exact re-execution and compaction.
 
 The service is DETERMINISTIC by construction: every source of randomness
 (the tenant's measured channel gains and the policy's raw selection
@@ -8,23 +8,39 @@ served decision and every queue update bit for bit. That gives the online
 service the same numeric-contract discipline as the offline engines
 (grid == scan, mesh-1 == sequential, ...): the log IS the trajectory.
 
-The log records one entry per ``flush()`` — the requests of that flush in
-submission order. Replay re-submits them in order, so the batcher forms
-the identical waves/buckets/padded batches and the identical compiled
-programs run on identical inputs.
+The log records one entry per *serve group* — one bucket's batch within
+one flush wave, appended by the batcher immediately after that group's
+state scatter is dispatched. Group granularity is what makes the log
+FAILURE-ATOMIC: if ``flush()`` raises partway (wave 2 of 3, or bucket 2
+of a wave), every group whose queue update actually happened is already
+logged and nothing else is, so replay from the last snapshot cannot
+diverge from the live service. Replay re-submits each entry's requests in
+order and flushes: a group's tenants are unique (a wave touches each
+tenant at most once), so the batcher re-forms the identical single wave,
+bucket, and padded batch, and the identical compiled program runs on
+identical inputs.
 
-``save``/``load`` persist the log as a flattened-key npz (same format
-family as ``repro.checkpoint.io``); the raw-draw pytree structure is
-reconstructed from each tenant's policy on load.
+``compact(snapshot)`` bounds host memory for long-running deployments: it
+drops every entry already covered by the given state snapshot and records
+the snapshot IN the log, so ``replay`` first restores it —
+replay-from-compacted-log equals replay-from-full-log bit for bit while
+the retained entry list stays short (tests/test_service.py).
+
+``save``/``load`` persist the log — entries, compaction snapshot and all
+— as a flattened-key npz (same format family as ``repro.checkpoint.io``);
+the raw-draw pytree structure is reconstructed from each tenant's policy
+on load.
 """
 
 from __future__ import annotations
 
 import os
-from typing import Dict, List, NamedTuple
+from typing import Dict, List, NamedTuple, Optional
 
 import jax
 import numpy as np
+
+from repro.core.policies import PolicyState
 
 
 class LoggedRequest(NamedTuple):
@@ -34,31 +50,51 @@ class LoggedRequest(NamedTuple):
 
 
 class RequestLog:
-    """Flush-granular append-only request log."""
+    """Serve-group-granular append-only request log with compaction."""
 
     def __init__(self):
-        self.flushes: List[List[LoggedRequest]] = []
+        self.entries: List[List[LoggedRequest]] = []
+        self.snapshot: Optional[Dict[str, PolicyState]] = None
+        self.n_compacted: int = 0    # entries dropped by compact()
 
     def __len__(self) -> int:
-        return len(self.flushes)
+        return len(self.entries)
 
     @property
     def n_requests(self) -> int:
-        return sum(len(f) for f in self.flushes)
+        return sum(len(e) for e in self.entries)
 
-    def append_flush(self, requests: List[LoggedRequest]) -> None:
-        self.flushes.append(list(requests))
+    def append_entry(self, requests: List[LoggedRequest]) -> None:
+        self.entries.append(list(requests))
+
+    # --------------------------------------------------------- compaction
+    def compact(self, snapshot: Dict[str, PolicyState]) -> int:
+        """Drop every retained entry; record ``snapshot`` as the new replay
+        base. ``snapshot`` must be the service's state AFTER the retained
+        entries were served (``SchedulerService.compact_log`` guarantees
+        that by snapshotting at a flush boundary). Returns the number of
+        entries dropped."""
+        dropped = len(self.entries)
+        self.snapshot = jax.tree.map(np.asarray, snapshot)
+        self.n_compacted += dropped
+        self.entries = []
+        return dropped
 
     # ------------------------------------------------------------- replay
-    def replay(self, service) -> List[Dict[str, object]]:
+    def replay(self, service, restore: bool = True
+               ) -> List[Dict[str, object]]:
         """Re-execute the log through ``service`` (same tenants required).
 
-        Returns the per-flush response dicts. Bit-exactness holds when
-        ``service`` starts from the same state snapshot the log started
-        from (``tests/test_service.py`` pins this).
+        A compacted log first restores its recorded snapshot into
+        ``service`` (``restore=False`` skips that, for callers that
+        restored state themselves). Returns the per-entry response dicts.
+        Bit-exactness holds when ``service`` starts from the same state
+        the log's base refers to (``tests/test_service.py`` pins this).
         """
+        if restore and self.snapshot is not None:
+            service.restore(self.snapshot)
         out = []
-        for requests in self.flushes:
+        for requests in self.entries:
             for r in requests:
                 service.submit(r.tenant, r.gains, raw=r.raw)
             out.append(service.flush(log=False))
@@ -66,8 +102,17 @@ class RequestLog:
 
     # ------------------------------------------------------- persistence
     def save(self, path: str) -> None:
-        flat = {"n_flushes": np.int64(len(self.flushes))}
-        for i, requests in enumerate(self.flushes):
+        flat = {"n_entries": np.int64(len(self.entries)),
+                "n_compacted": np.int64(self.n_compacted)}
+        if self.snapshot is not None:
+            flat["snap/n"] = np.int64(len(self.snapshot))
+            for i, (bstr, st) in enumerate(sorted(self.snapshot.items())):
+                st = PolicyState(*st)
+                flat[f"snap/{i}/key"] = np.asarray(bstr)
+                flat[f"snap/{i}/z"] = np.asarray(st.z, np.float32)
+                flat[f"snap/{i}/aux"] = np.asarray(st.aux, np.float32)
+                flat[f"snap/{i}/t"] = np.asarray(st.t, np.int32)
+        for i, requests in enumerate(self.entries):
             flat[f"f{i}/n"] = np.int64(len(requests))
             for j, r in enumerate(requests):
                 pre = f"f{i}/r{j}"
@@ -88,7 +133,14 @@ class RequestLog:
         with np.load(path) as data:
             flat = dict(data)
         log = cls()
-        for i in range(int(flat["n_flushes"])):
+        log.n_compacted = int(flat.get("n_compacted", 0))
+        if "snap/n" in flat:
+            log.snapshot = {
+                str(flat[f"snap/{i}/key"]): PolicyState(
+                    z=flat[f"snap/{i}/z"], aux=flat[f"snap/{i}/aux"],
+                    t=flat[f"snap/{i}/t"])
+                for i in range(int(flat["snap/n"]))}
+        for i in range(int(flat["n_entries"])):
             requests = []
             for j in range(int(flat[f"f{i}/n"])):
                 pre = f"f{i}/r{j}"
@@ -102,5 +154,5 @@ class RequestLog:
                 requests.append(LoggedRequest(
                     tenant=tenant, gains=flat[f"{pre}/gains"],
                     raw=jax.tree.unflatten(treedef, leaves)))
-            log.append_flush(requests)
+            log.append_entry(requests)
         return log

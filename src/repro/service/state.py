@@ -25,10 +25,23 @@ per-tenant coefficient bundles ((T,) scalar leaves — the operand form of
 ``repro/core/scheduler.py``), and the real client counts. The state
 arrays are the ones the serving step donates and scatters back into.
 
+Tenant lifecycle: registration is no longer append-only. ``evict(name)``
+pulls a tenant's live padded state row to the host and COMPACTS the
+bucket's stacked arrays (sibling rows shift down; their live queues are
+preserved BY NAME across every re-materialization, so neither admission
+nor eviction can reset a served tenant's Z — pinned bitwise in
+tests/test_service.py); ``readmit(spec, row)`` re-admits an evicted
+tenant with the exact spilled row installed, bitwise-identical to never
+having left. Row positions within a bucket carry no numeric meaning (the
+serving step is row-elementwise and the operand contract makes it
+bit-stable across batch shapes), which is what makes compaction and
+re-bucketing bit-safe.
+
 Snapshot/restore rides ``repro.checkpoint.io``: a snapshot is the
 ``{bucket-key-string: PolicyState}`` pytree (host copies, safe against
 donation), and ``save``/``load`` round-trip it through the flattened-key
-npz format.
+npz format (restore templates are ``tree_template`` skeletons — no
+throwaway host copy).
 """
 
 from __future__ import annotations
@@ -40,7 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.io import load_pytree, save_pytree
+from repro.checkpoint.io import load_pytree, save_pytree, tree_template
 from repro.core.channel import ChannelConfig
 from repro.core.policies import POLICIES, PolicyState, policy_aux_init
 from repro.core.scheduler import SchedulerConfig
@@ -86,12 +99,22 @@ class TenantSpec:
                          padded_len(self.n), self.scfg.guarantee_one)
 
 
+def _host_row(state: PolicyState, i: int) -> PolicyState:
+    """One tenant's padded state row as host arrays (a pure memcpy —
+    bitwise, so spill/reload and re-materialization preserve bits)."""
+    return PolicyState(z=np.asarray(state.z[i]),
+                       aux=np.asarray(state.aux[i]),
+                       t=np.asarray(state.t[i]))
+
+
 class _Bucket:
     """Stacked device arrays for one bucket's tenants."""
 
     def __init__(self, key: BucketKey):
         self.key = key
         self.tenants: list = []          # TenantSpec, row order
+        self.row_of: Dict[str, int] = {}
+        self.pending: Dict[str, PolicyState] = {}  # rows to install (readmit)
         self.state: Optional[PolicyState] = None
         self.coeffs = None               # stacked policy-coeff pytree
         self.acct = None                 # stacked AccountCoeffs
@@ -109,13 +132,22 @@ class _Bucket:
         aux[: spec.n] = np.asarray(policy_aux_init(spec.policy, spec.n))
         return PolicyState(z=z, aux=aux, t=np.zeros((), np.int32))
 
-    def materialize(self):
-        """(Re)build the stacked device arrays from the tenant list."""
-        rows = [self.row_state(s) for s in self.tenants]
+    def materialize(self, preserve: Optional[Dict[str, PolicyState]] = None):
+        """(Re)build the stacked device arrays from the tenant list.
+
+        ``preserve`` maps tenant name -> the live host state row to
+        install (served queues of already-registered tenants, or a
+        readmitted tenant's spilled row); everyone else gets a fresh
+        zero-queue row. Preservation is BY NAME, so row positions may
+        shift (eviction compaction) without touching any tenant's bits.
+        """
+        preserve = preserve or {}
+        rows = [preserve.get(s.name) if s.name in preserve
+                else self.row_state(s) for s in self.tenants]
         self.state = PolicyState(
-            z=jnp.asarray(np.stack([r.z for r in rows])),
-            aux=jnp.asarray(np.stack([r.aux for r in rows])),
-            t=jnp.asarray(np.stack([r.t for r in rows])))
+            z=jnp.asarray(np.stack([np.asarray(r.z) for r in rows])),
+            aux=jnp.asarray(np.stack([np.asarray(r.aux) for r in rows])),
+            t=jnp.asarray(np.stack([np.asarray(r.t) for r in rows])))
         co = [policy_coeffs(s.policy, s.scfg, s.ch, s.m_avg)
               for s in self.tenants]
         ac = [account_coeffs(s.scfg, s.ch) for s in self.tenants]
@@ -125,6 +157,7 @@ class _Bucket:
                                  *ac)
         self.n_real = jnp.asarray(
             np.array([s.n for s in self.tenants], np.int32))
+        self.row_of = {s.name: i for i, s in enumerate(self.tenants)}
 
 
 class TenantStore:
@@ -132,7 +165,6 @@ class TenantStore:
 
     def __init__(self):
         self._tenants: Dict[str, TenantSpec] = {}
-        self._rows: Dict[str, int] = {}
         self._buckets: Dict[BucketKey, _Bucket] = {}
         self._dirty: set = set()
 
@@ -160,10 +192,39 @@ class TenantStore:
                 f"round(m_avg) <= n_clients, got {spec.m_avg!r} > {spec.n}")
         bucket = self._buckets.setdefault(spec.bucket, _Bucket(spec.bucket))
         self._tenants[spec.name] = spec
-        self._rows[spec.name] = bucket.size
         bucket.tenants.append(spec)
         self._dirty.add(spec.bucket)
         return spec
+
+    def evict(self, name: str) -> PolicyState:
+        """Pull ``name``'s live padded state row to the host, drop the
+        tenant, and compact its bucket (sibling rows shift; their queues
+        are preserved by name). Returns the spilled row — ``readmit``
+        with it restores the tenant bitwise."""
+        spec = self.spec(name)
+        b = self.bucket_of(name)         # resolves dirty buckets first
+        row = _host_row(b.state, b.row_of[name])
+        del self._tenants[name]
+        b.tenants = [s for s in b.tenants if s.name != name]
+        if not b.tenants:
+            del self._buckets[spec.bucket]
+            self._dirty.discard(spec.bucket)
+        else:
+            self._dirty.add(spec.bucket)
+        return row
+
+    def readmit(self, spec: TenantSpec, row: PolicyState) -> TenantSpec:
+        """Re-admit an evicted tenant with its spilled padded state row
+        installed verbatim — bitwise-identical to never having left."""
+        nb = spec.bucket.n_bucket
+        row = jax.tree.map(np.asarray, PolicyState(*row))
+        if row.z.shape != (nb,) or row.aux.shape != (nb,):
+            raise ValueError(
+                f"readmit row for {spec.name!r} has shapes "
+                f"z{row.z.shape}/aux{row.aux.shape}, bucket wants ({nb},)")
+        out = self.add(spec)
+        self._buckets[spec.bucket].pending[spec.name] = row
+        return out
 
     def spec(self, name: str) -> TenantSpec:
         if name not in self._tenants:
@@ -171,7 +232,7 @@ class TenantStore:
         return self._tenants[name]
 
     def row(self, name: str) -> int:
-        return self._rows[name]
+        return self.bucket_of(name).row_of[name]
 
     def __contains__(self, name: str) -> bool:
         return name in self._tenants
@@ -186,21 +247,22 @@ class TenantStore:
     def buckets(self) -> Dict[BucketKey, "_Bucket"]:
         """Materialized buckets (registration order preserved per bucket).
 
-        Registering a tenant re-materializes only its own bucket — fresh
-        tenants start with zero queues; existing tenants' state is kept.
+        Registering/evicting a tenant re-materializes only its own
+        bucket. Fresh tenants start with zero queues; every tenant that
+        already has a live (or pending readmitted) state row keeps it —
+        by name, so compaction-shifted row positions cannot reset
+        anyone's queues.
         """
         for key in list(self._dirty):
             b = self._buckets[key]
-            old_state, old_size = b.state, 0
-            if old_state is not None:
-                old_size = int(old_state.z.shape[0])
-            b.materialize()
-            if old_state is not None and old_size:
-                # keep the served queues of previously-registered tenants
-                b.state = PolicyState(
-                    z=b.state.z.at[:old_size].set(old_state.z),
-                    aux=b.state.aux.at[:old_size].set(old_state.aux),
-                    t=b.state.t.at[:old_size].set(old_state.t))
+            preserve = dict(b.pending)
+            b.pending = {}
+            if b.state is not None:
+                current = {s.name for s in b.tenants}
+                for name, i in b.row_of.items():
+                    if name in current and name not in preserve:
+                        preserve[name] = _host_row(b.state, i)
+            b.materialize(preserve)
             self._dirty.discard(key)
         return self._buckets
 
@@ -212,7 +274,7 @@ class TenantStore:
         """One tenant's live (unpadded) PolicyState, as host arrays."""
         spec = self.spec(name)
         b = self.bucket_of(name)
-        r = self._rows[name]
+        r = b.row_of[name]
         return PolicyState(
             z=np.asarray(b.state.z[r, : spec.n]),
             aux=np.asarray(b.state.aux[r, : spec.n]),
@@ -248,5 +310,6 @@ class TenantStore:
 
     def load(self, path: str) -> None:
         """Restore from :meth:`save`'s npz (tenants must be registered)."""
-        template = self.snapshot()
+        template = {k.as_string(): tree_template(b.state)
+                    for k, b in self.buckets().items()}
         self.restore(load_pytree(path, template))

@@ -22,6 +22,15 @@ accounting. What this module adds is the multi-tenant batched form:
 * the bucket's stacked queue state is DONATED to the step, so serving
   updates Z in place — no state copies per request.
 
+A step is a plain jitted function of runtime operands: tenant count T and
+batch size enter only as operand SHAPES, so one step instance serves a
+bucket across admissions, evictions, and every power-of-two batch size
+(each shape compiles once — ``SchedulerService.warmup`` pre-compiles the
+batch shapes off the serving path, and the staged/legacy batch builders in
+``service/batching.py`` feed the same program identical arrays, which is
+what makes their bitwise parity a build-layer property, not a numeric
+one).
+
 Bitwise contract: with ``solver="jnp"`` a served (sel, q, P) row —
 sliced to the tenant's real N — is bitwise-equal to what
 ``run_simulation_scan`` computes for that tenant's configuration on the

@@ -261,6 +261,33 @@ def _random_flushes(svc, n_flushes, seed=11):
     return out
 
 
+def _per_tenant(dicts):
+    """Collect response dicts into per-tenant decision sequences (live
+    flush responses and per-entry replay responses group differently —
+    the served order per tenant is the comparable thing)."""
+    out = {}
+    for d in dicts:
+        for nm, dec in d.items():
+            out.setdefault(nm, []).append(dec)
+    return out
+
+
+def _assert_tenant_sequences_equal(live, replayed):
+    a, b = _per_tenant(live), _per_tenant(replayed)
+    assert set(a) == set(b)
+    for nm in a:
+        assert len(a[nm]) == len(b[nm]), nm
+        for r, (x, y) in enumerate(zip(a[nm], b[nm])):
+            np.testing.assert_array_equal(x.sel, y.sel,
+                                          err_msg=f"{nm} serve {r}")
+            np.testing.assert_array_equal(x.q, y.q,
+                                          err_msg=f"{nm} serve {r}")
+            np.testing.assert_array_equal(x.p, y.p,
+                                          err_msg=f"{nm} serve {r}")
+            np.testing.assert_array_equal(x.t_comm, y.t_comm)
+            np.testing.assert_array_equal(x.power, y.power)
+
+
 def test_donation_snapshot_restore_replay_bitexact(tmp_path):
     """Stepping twice from a snapshot equals replay: donated buffers never
     corrupt semantics, and a restored service reproduces the logged
@@ -280,20 +307,9 @@ def test_donation_snapshot_restore_replay_bitexact(tmp_path):
     svc2 = _two_tenant_service()
     svc2.load(str(tmp_path / "state.npz"))   # restore the snapshot
     replay_log = RequestLog()
-    replay_log.flushes = log.flushes[mark:]  # the post-snapshot session
+    replay_log.entries = log.entries[mark:]  # the post-snapshot session
     replayed = replay_log.replay(svc2)
-    assert len(replayed) == len(live)
-    for r, (a, b) in enumerate(zip(live, replayed)):
-        assert set(a) == set(b)
-        for nm in a:
-            np.testing.assert_array_equal(a[nm].sel, b[nm].sel,
-                                          err_msg=f"flush {r} {nm}")
-            np.testing.assert_array_equal(a[nm].q, b[nm].q,
-                                          err_msg=f"flush {r} {nm}")
-            np.testing.assert_array_equal(a[nm].p, b[nm].p,
-                                          err_msg=f"flush {r} {nm}")
-            np.testing.assert_array_equal(a[nm].t_comm, b[nm].t_comm)
-            np.testing.assert_array_equal(a[nm].power, b[nm].power)
+    _assert_tenant_sequences_equal(live, replayed)
     # final queue state identical too
     for nm in ("a", "b"):
         s1, s2 = svc.tenant_state(nm), svc2.tenant_state(nm)
@@ -364,8 +380,9 @@ def test_validation_errors():
 
 
 def test_failed_flush_logs_nothing():
-    """A flush that raises must not be recorded in the replay log (the
-    log must contain exactly the served requests, or replay diverges)."""
+    """A flush whose FIRST serve group raises must not be recorded in the
+    replay log (the log must contain exactly the requests whose queue
+    updates happened, or replay diverges)."""
     scfg, ch = _configs(n=64)
     svc = SchedulerService(solver="pallas")
     svc.add_tenant("x", scfg, ch)
@@ -376,6 +393,302 @@ def test_failed_flush_logs_nothing():
     with pytest.raises(ValueError, match="homogeneous"):
         svc.flush()
     assert len(svc.log) == 0 and svc.log.n_requests == 0
+
+
+def test_flush_failure_midway_replay_stays_bitexact():
+    """The headline failure-atomicity fix: a flush that raises on wave 2
+    of 3 has already advanced queue state for wave 1 — the log must hold
+    EXACTLY that wave, so replay from the last snapshot reproduces the
+    live (partially-advanced) state bit for bit."""
+    from repro.service import RequestLog
+
+    scfg, ch = _configs()
+    svc = SchedulerService()
+    svc.add_tenant("t", scfg, ch)
+    key = jax.random.PRNGKey(21)
+    gains = [np.abs(np.asarray(jax.random.normal(
+        jax.random.fold_in(key, r), (N,)))) + 0.01 for r in range(4)]
+    svc.submit("t", gains[0], key=jax.random.fold_in(key, 100))
+    svc.flush()                              # pre-roll: non-trivial queues
+    snap = svc.snapshot()
+    mark = len(svc.log)
+
+    for r in range(3):                       # same tenant 3x -> 3 waves
+        svc.submit("t", gains[1 + r], key=jax.random.fold_in(key, 200 + r))
+    orig = svc._dispatch_group
+    calls = {"n": 0}
+
+    def boom(*args, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("injected wave-2 failure")
+        return orig(*args, **kw)
+
+    svc._dispatch_group = boom
+    with pytest.raises(RuntimeError, match="injected"):
+        svc.flush()
+    svc._dispatch_group = orig
+    assert calls["n"] == 2
+    # exactly the served wave was logged; the failed + unserved ones not
+    assert len(svc.log) == mark + 1
+    assert int(svc.tenant_state("t").t) == 2   # pre-roll + wave 1 only
+
+    svc2 = SchedulerService()
+    svc2.add_tenant("t", scfg, ch)
+    svc2.restore(snap)
+    tail = RequestLog()
+    tail.entries = svc.log.entries[mark:]
+    tail.replay(svc2, restore=False)
+    s1, s2 = svc.tenant_state("t"), svc2.tenant_state("t")
+    np.testing.assert_array_equal(s1.z, s2.z)
+    np.testing.assert_array_equal(s1.aux, s2.aux)
+    assert int(s1.t) == int(s2.t)
+
+
+def test_submit_rejects_nonfinite_gains():
+    """`np.all(gains > 0)` alone admits +inf, which poisons the Theorem-2
+    solve (log2 of inf SNR) and NaN-contaminates the shared bucket batch
+    — non-finite gains must be rejected at submit, leaving nothing
+    queued."""
+    scfg, ch = _configs()
+    svc = SchedulerService()
+    svc.add_tenant("t", scfg, ch)
+    for poison in (np.inf, -np.inf, np.nan):
+        bad = np.ones(N, np.float32)
+        bad[7] = poison
+        with pytest.raises(ValueError, match="finite"):
+            svc.submit("t", bad, key=jax.random.PRNGKey(0))
+    assert svc.n_queued == 0 and len(svc.log) == 0
+
+
+# --------------------------------------------------------------------------
+# Tenant lifecycle: admission, eviction/spill/reload, log compaction.
+# --------------------------------------------------------------------------
+
+def test_add_tenant_preserves_sibling_queues_bitwise():
+    """Admitting a new tenant into a non-empty bucket must not reset the
+    sibling tenants' live Z-queues: serve A for 5 rounds, admit B into
+    A's bucket, and A's next decision is bitwise-unchanged vs a no-add
+    control."""
+    scfg, ch = _configs()
+    sig = heterogeneous_sigmas(N)
+    stream = _engine_stream(jax.random.PRNGKey(7), scfg, ch, sig, 6)
+
+    ctrl = SchedulerService()
+    ctrl.add_tenant("a", scfg, ch)
+    test = SchedulerService()
+    test.add_tenant("a", scfg, ch)
+    for r in stream[:5]:
+        ctrl.submit("a", r["gains"], raw=r["raw"])
+        ctrl.flush()
+        test.submit("a", r["gains"], raw=r["raw"])
+        test.flush()
+    # same N -> same bucket key; different V exercises the coeff restack
+    test.add_tenant("b", dataclasses.replace(scfg, V=321.0), ch)
+    sa, sc = test.tenant_state("a"), ctrl.tenant_state("a")
+    np.testing.assert_array_equal(sa.z, sc.z)      # admission reset check
+    r = stream[5]
+    ctrl.submit("a", r["gains"], raw=r["raw"])
+    test.submit("a", r["gains"], raw=r["raw"])
+    da, dc = test.flush()["a"], ctrl.flush()["a"]
+    _assert_decisions_equal(da, {**r, "sel": dc.sel, "q": dc.q, "p": dc.p,
+                                 "t_comm": dc.t_comm, "power": dc.power,
+                                 "n_sel": int(dc.n_sel)},
+                            msg="after admitting sibling")
+
+
+def test_evict_spill_reload_bitwise_vs_never_evicted(tmp_path):
+    """evict -> spill (through the checkpoint substrate on disk) ->
+    reload -> serve is bitwise-equal to never having evicted — including
+    for the SIBLING tenant whose row shifts when the bucket compacts."""
+    scfg, ch = _configs()
+    sib = dataclasses.replace(scfg, V=44.0, lam=3.0)  # same bucket as "a"
+    uni_s = SchedulerConfig(n_clients=70, model_bits=1e6, lam=2.0, V=300.0)
+    uni_c = ChannelConfig(n_clients=70, p_max=60.0)
+
+    def build(spill_dir=None):
+        svc = SchedulerService(spill_dir=spill_dir)
+        svc.add_tenant("a", scfg, ch)
+        svc.add_tenant("c", sib, ch)
+        svc.add_tenant("b", uni_s, uni_c, policy="uniform", m_avg=6.0)
+        return svc
+
+    base, lc = build(), build(spill_dir=str(tmp_path))
+    key = jax.random.PRNGKey(31)
+
+    def serve(names, r):
+        out = {}
+        for svc in (base, lc):
+            for i, nm in enumerate(names):
+                n = {"a": N, "c": N, "b": 70}[nm]
+                k = jax.random.fold_in(jax.random.fold_in(key, r), i)
+                g = np.abs(np.asarray(jax.random.normal(k, (n,)))) + 0.01
+                svc.submit(nm, g, key=jax.random.fold_in(k, 1))
+            out[svc] = svc.flush()
+        return out[base], out[lc]
+
+    for r in range(3):
+        serve(("a", "c", "b"), r)
+    lc.evict("a")                       # bucket compacts; "c" row shifts
+    assert lc.spilled == ("a",)
+    import glob
+    assert glob.glob(str(tmp_path / "spill-*.npz"))   # really on disk
+    for r in range(3, 5):               # "a" idle on base, evicted on lc
+        db, dl = serve(("c", "b"), r)
+        for nm in ("c", "b"):           # sibling unharmed by compaction
+            np.testing.assert_array_equal(db[nm].q, dl[nm].q, err_msg=nm)
+            np.testing.assert_array_equal(db[nm].sel, dl[nm].sel)
+    lc.reload("a")
+    assert lc.spilled == ()
+    for r in range(5, 7):
+        db, dl = serve(("a", "c", "b"), r)
+        for nm in ("a", "c", "b"):
+            np.testing.assert_array_equal(db[nm].sel, dl[nm].sel,
+                                          err_msg=f"{nm} round {r}")
+            np.testing.assert_array_equal(db[nm].q, dl[nm].q)
+            np.testing.assert_array_equal(db[nm].p, dl[nm].p)
+            np.testing.assert_array_equal(db[nm].t_comm, dl[nm].t_comm)
+    for nm in ("a", "c", "b"):
+        s1, s2 = base.tenant_state(nm), lc.tenant_state(nm)
+        np.testing.assert_array_equal(s1.z, s2.z, err_msg=nm)
+        np.testing.assert_array_equal(s1.aux, s2.aux, err_msg=nm)
+        assert int(s1.t) == int(s2.t)
+
+
+def test_evict_lru_and_auto_reload_on_submit():
+    """evict_lru picks the least-recently-served tenant; a submit to an
+    evicted tenant transparently reloads it."""
+    svc = _two_tenant_service()
+    _random_flushes(svc, 1, seed=3)
+    # "a" was submitted before "b" each flush, but both were touched;
+    # touch "a" again so "b" is the LRU
+    svc.submit("a", np.ones(N, np.float32), key=jax.random.PRNGKey(5))
+    svc.flush()
+    assert svc.evict_lru() == "b"
+    assert "b" not in svc.store and svc.spilled == ("b",)
+    with pytest.raises(ValueError, match="reload"):
+        svc.add_tenant("b", SchedulerConfig(n_clients=70, model_bits=1e6),
+                       ChannelConfig(n_clients=70))
+    svc.submit("b", np.ones(70, np.float32), key=jax.random.PRNGKey(6))
+    assert "b" in svc.store           # auto-reloaded
+    d = svc.flush()["b"]
+    assert d.sel.shape == (70,)
+    # queued requests pin a tenant: not evictable
+    svc.submit("a", np.ones(N, np.float32), key=jax.random.PRNGKey(7))
+    with pytest.raises(ValueError, match="queued"):
+        svc.evict("a")
+    svc.flush()
+
+
+def test_compacted_log_replay_equals_full_log_replay(tmp_path):
+    """compact_log() drops served entries and records the snapshot in
+    the log; replaying the compacted log equals replaying the full log —
+    and the live service — bit for bit, including through npz
+    save/load."""
+    from repro.service import RequestLog
+
+    svc = _two_tenant_service()
+    start = svc.snapshot()
+    _random_flushes(svc, 2, seed=5)
+    full_entries = [list(e) for e in svc.log.entries]
+    svc.compact_log()
+    assert len(svc.log) == 0 and svc.log.n_compacted == len(full_entries)
+    live = _random_flushes(svc, 3, seed=6)
+    full_entries += [list(e) for e in svc.log.entries]
+
+    # compacted-log replay (snapshot rides the log npz)
+    svc.log.save(str(tmp_path / "log.npz"))
+    structures = {n: svc.raw_structure(n) for n in ("a", "b")}
+    loaded = RequestLog.load(str(tmp_path / "log.npz"), structures)
+    assert loaded.snapshot is not None
+    assert loaded.n_compacted == svc.log.n_compacted
+    svc2 = _two_tenant_service()
+    replayed = loaded.replay(svc2)          # restores the snapshot itself
+    _assert_tenant_sequences_equal(live, replayed)
+
+    # full-log replay from the start state reaches the same final bits
+    full = RequestLog()
+    full.entries = full_entries
+    svc3 = _two_tenant_service()
+    svc3.restore(start)
+    full.replay(svc3, restore=False)
+    for nm in ("a", "b"):
+        s1, s2, s3 = (svc.tenant_state(nm), svc2.tenant_state(nm),
+                      svc3.tenant_state(nm))
+        np.testing.assert_array_equal(s1.z, s2.z, err_msg=nm)
+        np.testing.assert_array_equal(s2.z, s3.z, err_msg=nm)
+        assert int(s1.t) == int(s2.t) == int(s3.t)
+    # compacting with queued requests would lose them from the log
+    svc.submit("a", np.ones(N, np.float32), key=jax.random.PRNGKey(8))
+    with pytest.raises(ValueError, match="flush"):
+        svc.compact_log()
+    svc.flush()
+
+
+# --------------------------------------------------------------------------
+# Staged arenas: bitwise parity with the pad-per-request path + warmup.
+# --------------------------------------------------------------------------
+
+def test_staged_path_bitwise_equals_pad_per_flush_path():
+    """The staged-arena batch build is bitwise-equal to the PR-5
+    pad-per-request build on a mixed-bucket workload with multi-wave
+    flushes (same compiled programs, same inputs, same bits)."""
+    scfg, ch = _configs()
+    uni_s = SchedulerConfig(n_clients=70, model_bits=1e6, lam=2.0, V=300.0)
+    uni_c = ChannelConfig(n_clients=70, p_max=60.0)
+    gre_s = SchedulerConfig(n_clients=21, model_bits=2e6, V=50.0)
+    gre_c = ChannelConfig(n_clients=21, p_max=80.0)
+
+    def build(staging):
+        svc = SchedulerService(staging=staging)
+        svc.add_tenant("a", scfg, ch)
+        svc.add_tenant("c", dataclasses.replace(scfg, V=44.0), ch)
+        svc.add_tenant("u", uni_s, uni_c, policy="uniform", m_avg=6.0)
+        svc.add_tenant("g", gre_s, gre_c, policy="greedy_channel",
+                       m_avg=4.0)
+        return svc
+
+    staged, legacy = build(True), build(False)
+    assert staged.staging and not legacy.staging
+    key = jax.random.PRNGKey(13)
+    live_s, live_l = [], []
+    for r in range(4):
+        for i, (nm, n) in enumerate(
+                [("a", N), ("c", N), ("u", 70), ("g", 21), ("a", N)]):
+            k = jax.random.fold_in(jax.random.fold_in(key, r), i)
+            g = np.abs(np.asarray(jax.random.normal(k, (n,)))) + 0.01
+            kk = jax.random.fold_in(k, 1)
+            staged.submit(nm, g, key=kk)    # "a" twice -> 2 waves
+            legacy.submit(nm, g, key=kk)
+        live_s.append(staged.flush())
+        live_l.append(legacy.flush())
+    _assert_tenant_sequences_equal(live_l, live_s)
+    for nm in ("a", "c", "u", "g"):
+        s1, s2 = staged.tenant_state(nm), legacy.tenant_state(nm)
+        np.testing.assert_array_equal(s1.z, s2.z, err_msg=nm)
+        assert int(s1.t) == int(s2.t)
+
+
+def test_warmup_leaves_state_bitwise_untouched():
+    """warmup() serves all-sentinel batches — every row is scatter-
+    dropped, so tenant state is bitwise-identical before and after, and
+    the next real decision matches a no-warmup control."""
+    svc = _two_tenant_service()
+    _random_flushes(svc, 1, seed=9)
+    before = svc.snapshot()
+    svc.warmup(max_batch=8)
+    after = svc.snapshot()
+    for k in before:
+        np.testing.assert_array_equal(before[k].z, after[k].z, err_msg=k)
+        np.testing.assert_array_equal(before[k].aux, after[k].aux)
+        np.testing.assert_array_equal(before[k].t, after[k].t)
+    ctrl = _two_tenant_service()
+    _random_flushes(ctrl, 1, seed=9)
+    d1 = _random_flushes(svc, 1, seed=10)[0]
+    d2 = _random_flushes(ctrl, 1, seed=10)[0]
+    for nm in ("a", "b"):
+        np.testing.assert_array_equal(d1[nm].q, d2[nm].q, err_msg=nm)
+        np.testing.assert_array_equal(d1[nm].sel, d2[nm].sel, err_msg=nm)
 
 
 def test_pallas_solver_bucket():
