@@ -57,6 +57,7 @@ METRICS = {
         "n.100000.decision_stitched_us": "lower",
         "n.100000.decision_fused_us": "lower",
         "n.1000000.decision_fused_us": "lower",
+        "mesh2d.rounds_per_sec": "higher",
     },
     "service": {
         "scenarios.full.decisions_per_sec": "higher",

@@ -20,14 +20,20 @@ import time
 
 import numpy as np
 
+from repro.launch.distributed import is_main, main_print
+
 OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "out")
 
 
 def _emit(name: str, us_per_call: float, derived: str):
-    print(f"{name},{us_per_call:.1f},{derived}")
+    # rank-0 gated: a multi-process run emits ONE csv stream, not one per
+    # process (repro/launch/distributed.py).
+    main_print(f"{name},{us_per_call:.1f},{derived}")
 
 
 def _dump(name: str, obj):
+    if not is_main():
+        return
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
         json.dump(obj, f, default=lambda o: np.asarray(o).tolist())
@@ -683,6 +689,46 @@ def bench_massive(prof):
             _emit(f"massive_n{n}_decision_{label}", d_us,
                   f"per_client_ns={d_us * 1000 / n:.1f}")
         results["n"][n] = entry
+
+    # composed 2D mesh: the FULL federated round (schedule sharded over
+    # 'client', packed participants' local SGD over 'part') on one shared
+    # (Dc, Dp) mesh — the fl/client_shard.py composition path. Smaller N
+    # than the scheduling-only rows above because this leg materializes a
+    # dataset and trains; what it watches is the round-loop throughput of
+    # the composed mesh, where a regression in the shard_map plumbing
+    # (operand pins, index-pack hand-off, psum aggregate) shows up as a
+    # collapsed rounds/s long before any parity test times out. Same
+    # shared-core caveat as above: flat vs sequential is expected here.
+    from repro.data.synthetic import make_cifar10_like
+    from repro.fl.engine import SimConfig, make_config_runner
+    from repro.models.registry import make_model
+    dc, dp = next((c, p) for c, p in ((4, 2), (2, 2), (2, 1), (1, 1))
+                  if c * p <= n_dev)
+    n2 = 96
+    ds = make_cifar10_like(jax.random.PRNGKey(3), n_clients=n2,
+                           per_client=32, n_test=64, h=8, w=8)
+    sim2 = SimConfig(rounds=rounds, eval_every=rounds, m_cap=6, batch=8,
+                     local_steps=2, eval_size=64, model="mlp",
+                     client_shards=dc, participant_shards=dp)
+    params = make_model("mlp", ds).init_fn(jax.random.PRNGKey(1))
+    ch2 = ChannelConfig(n_clients=n2)
+    scfg2 = SchedulerConfig(n_clients=n2, model_bits=32 * 50_000.0)
+    sig2 = heterogeneous_sigmas(n2)
+    runner2 = make_config_runner(ds, sim2, scfg2, ch2, sig2)
+    key2 = jax.random.PRNGKey(4)
+    t0 = time.time()
+    jax.block_until_ready(runner2(params, key2))
+    compile_wall = time.time() - t0
+    t0 = time.time()
+    jax.block_until_ready(runner2(params, key2))
+    wall = time.time() - t0
+    rps = rounds / wall
+    results["mesh2d"] = {"mesh": [dc, dp], "n_clients": n2,
+                         "rounds_per_sec": rps,
+                         "compile_plus_first_run_s": compile_wall}
+    _emit("massive_mesh2d", 1e6 / rps,
+          f"rounds_per_sec={rps:.2f};mesh={dc}x{dp};devices={n_dev};"
+          f"compile_s={compile_wall:.1f}")
     _dump("massive", results)
     return results
 

@@ -1,0 +1,21 @@
+"""§Perf hillclimbs: three (arch x shape) pairs, hypothesis -> change ->
+re-lower -> validate. Emits one JSON record per (pair, variant).
+
+Run from the repo root: PYTHONPATH=src python scripts/hillclimb.py
+"""
+import sys
+
+sys.argv = ["x"]  # probe_case parses argv; neutralize the script's own
+from repro.launch.dryrun import probe_case  # noqa: E402
+
+# H1 worst-roofline-fraction: minicpm prefill (memory 617s vs compute 17s)
+probe_case("minicpm-2b", "prefill_32k", False, attn_bf16=True)
+
+# H2 most collective-bound: granite decode (collective 0.19s vs compute 0.3ms)
+probe_case("granite-20b", "decode_32k", False, fsdp=False)
+
+# H3 paper-representative: kimi multi-pod FL train
+probe_case("kimi-k2-1t-a32b", "train_4k", True,
+           aggregation="paper")        # baseline
+probe_case("kimi-k2-1t-a32b", "train_4k", True,
+           aggregation="delta_bf16")   # iter 1

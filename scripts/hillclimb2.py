@@ -1,7 +1,11 @@
-"""§Perf hillclimb iteration 2 (after three refuted/confounded iter-1 runs)."""
+"""§Perf hillclimb iteration 2 (after three refuted/confounded iter-1 runs).
+
+Run from the repo root: PYTHONPATH=src python scripts/hillclimb2.py
+"""
 import sys
-sys.argv = ["x"]
-from repro.launch.dryrun import probe_case
+
+sys.argv = ["x"]  # probe_case parses argv; neutralize the script's own
+from repro.launch.dryrun import probe_case  # noqa: E402
 
 # H1 iter2: fused fp32 softmax, bf16 stored probs only
 probe_case("minicpm-2b", "prefill_32k", False, attn_bf16=True)

@@ -17,4 +17,4 @@ fi
 RUFF="ruff"
 command -v ruff >/dev/null 2>&1 || RUFF="python -m ruff"
 
-exec $RUFF check src tests benchmarks examples "$@"
+exec $RUFF check src tests benchmarks examples scripts "$@"

@@ -1,0 +1,15 @@
+"""Dry-run probe sweep over the SSM architectures (mamba2 / jamba): every
+launch shape, sequential and standard lowering.
+
+Run from the repo root: PYTHONPATH=src python scripts/probe_mamba.py
+"""
+import sys
+
+sys.argv = ["x"]  # probe_case parses argv; neutralize the script's own
+from repro.launch.dryrun import probe_case, probe_case_seq  # noqa: E402
+
+for arch in ("mamba2-130m", "jamba-v0.1-52b"):
+    probe_case_seq(arch, "train_4k")
+    probe_case_seq(arch, "prefill_32k")
+    probe_case(arch, "decode_32k", False)
+    probe_case(arch, "long_500k", False)

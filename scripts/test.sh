@@ -11,4 +11,4 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 # Nightly legs re-select the deselected markers by appending their own -m
 # (pytest keeps the LAST -m on the command line).
-exec python -m pytest -x -q -m "not slow and not massive and not tournament" "$@"
+exec python -m pytest -x -q -m "not slow and not massive and not tournament and not multihost" "$@"

@@ -338,7 +338,7 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
                           ch: ChannelConfig, sigmas: jax.Array, *,
                           n_shards: int, m_cap: int, m_avg: float = 0.0,
                           solve_fn=None, population=None, devices=None,
-                          fused: bool = False):
+                          fused: bool = False, mesh=None):
     """Build the one-``shard_map`` scheduling step for one round.
 
     Returns ``schedule(raw_ch, raw_pol, pol_state, ch_state, co) ->
@@ -366,16 +366,34 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
     swaps the per-shard policy step for the fused Pallas megakernel
     variant — solve + selection + Eq. 9 in one pass per shard slice,
     bitwise-equal to the stitched step (tests/test_decision_fused.py).
+
+    ``mesh`` rides a caller-owned mesh carrying a ``'client'`` axis of
+    extent ``n_shards`` (the composed round passes the shared
+    ``('client', 'part')`` mesh of ``fl/sharding.py::make_mesh2d``). The
+    specs below name only ``'client'``, so any extra axes are implicitly
+    replicated — every 'part' column runs an identical copy of the
+    per-shard schedule and the numeric contract is unchanged.
     """
     n = int(sigmas.shape[0])
-    devices = validate_client_shards(n_shards, sim_policy, sim_channel,
-                                     devices)
+    if mesh is not None:
+        if "client" not in mesh.axis_names:
+            raise ValueError(f"shared mesh {mesh.axis_names} has no "
+                             "'client' axis")
+        if mesh.shape["client"] != n_shards:
+            raise ValueError(
+                f"client_shards={n_shards} != mesh 'client' extent "
+                f"{mesh.shape['client']}")
+        validate_client_shards(n_shards, sim_policy, sim_channel,
+                               list(mesh.devices.flat))
+    else:
+        devices = validate_client_shards(n_shards, sim_policy, sim_channel,
+                                         devices)
+        mesh = Mesh(np.array(devices), ("client",))
     _validate_m_avg(sim_policy, m_avg)
     pcfg = None
     if population is not None:
         from repro.fl.population import population_config
         pcfg = population_config(population)
-    mesh = Mesh(np.array(devices), ("client",))
     n_pad = padded_len(n)
     n_local = n_pad // n_shards
     ckw = dict(channel_params)
@@ -478,12 +496,36 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
         sharded = shard_map(shard_body_pop, mesh=mesh, in_specs=in_specs,
                             out_specs=out_specs)
 
+    # On a composed mesh with a real 'part' extent, every value entering
+    # the shard_map must be pinned FULLY REPLICATED first: jax 0.4.37's
+    # GSPMD assembles an in-jit-produced operand that is client-sharded but
+    # part-replicated with a dynamic-update-slice + all-reduce over ALL
+    # mesh devices, double-counting the part columns (observed: operands
+    # arrive multiplied by the 'part' extent). Replicated operands reshard
+    # into the manual region with a local slice — no collective, no bug —
+    # at the cost of materializing the (N,) operands per device (which is
+    # GSPMD's default placement without hints anyway).
+    repl2d = dict(mesh.shape).get("part", 1) > 1
+
+    def replicate2d(x):
+        if not repl2d:
+            return x
+        return jax.tree.map(
+            lambda a: a if jnp.ndim(a) == 0
+            else jax.lax.with_sharding_constraint(
+                a, NamedSharding(mesh, P())), x)
+
     def constrain(raw):
         # the raws are drawn full-shape OUTSIDE the shard_map (mesh-
         # invariant bits); without a placement hint GSPMD materializes the
         # whole (N,) draw on every device. The constraint shards the draw
         # output across the client mesh — purely a placement choice, the
         # values are untouched (verified bit-exact), worth ~15% at N=10^6.
+        # (On a part>1 mesh the client-sharded placement is the buggy
+        # reshard above — replicate2d then pins the padded operands
+        # instead, and this hint is skipped.)
+        if repl2d:
+            return raw
         return jax.tree.map(
             lambda x: x if jnp.ndim(x) == 0
             else jax.lax.with_sharding_constraint(
@@ -497,11 +539,18 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
         z = pad_client_axis(pol_state.z, n_pad, 0.0)
         aux = pad_client_axis(pol_state.aux, n_pad, 0.0)
         cst = pad_client_axis(ch_state, n_pad, 0.0)
+        raw_ch, raw_pol, z, aux, cst = replicate2d(
+            (raw_ch, raw_pol, z, aux, cst))
         (t_comm, power, n_sel, sel_idx, sel_valid, q_sel, z, aux, t,
          cst) = sharded(raw_ch, raw_pol, z, aux, pol_state.t, cst, sig_pad,
                         co)
+        # exit-side pin (same bug, other direction): the sliced state is
+        # client-sharded + part-replicated; left unconstrained, a scan
+        # carrying it picks a layout whose in-loop reshard goes through
+        # the buggy subgroup assembly. Replicated carries are safe.
+        z, aux, cst = replicate2d((z[:n], aux[:n], cst[..., :n]))
         return (t_comm, power, n_sel, sel_idx, sel_valid, q_sel,
-                PolicyState(z[:n], aux[:n], t), cst[..., :n])
+                PolicyState(z, aux, t), cst)
 
     def schedule_pop(raw_ch, raw_pol, raw_pop, pol_state: PolicyState,
                      ch_state, co):
@@ -519,12 +568,17 @@ def make_sharded_schedule(sim_policy: str, sim_channel: str,
         z = pad_client_axis(pol_state.z, n_pad, 0.0)
         aux = pad_client_axis(pol_state.aux, n_pad, 0.0)
         cst = pad_client_axis(cst, n_pad, 0.0)
+        (raw_ch, raw_pol, raw_churn, raw_fail, active, z, aux,
+         cst) = replicate2d((raw_ch, raw_pol, raw_churn, raw_fail, active,
+                             z, aux, cst))
         (t_comm, power, n_sel, sel_idx, sel_valid, q_sel, z, aux, t, cst,
          active) = sharded(raw_ch, raw_pol, raw_churn, raw_fail, active, z,
                            aux, pol_state.t, cst, sig_pad, co)
+        # exit-side pin — see schedule() above
+        z, aux, cst, active = replicate2d(
+            (z[:n], aux[:n], cst[..., :n], active[:n]))
         return (t_comm, power, n_sel, sel_idx, sel_valid, q_sel,
-                PolicyState(z[:n], aux[:n], t),
-                (cst[..., :n], active[:n]))
+                PolicyState(z, aux, t), (cst, active))
 
     return schedule if pcfg is None else schedule_pop
 
@@ -645,24 +699,41 @@ def make_client_sharded_round(ds, sim, scfg: SchedulerConfig,
     ``'client'`` mesh; the <= m_cap merged participants then train exactly
     as the sequential engine trains them (same packed indices, same batch
     draws, same masked aggregate).
+
+    ``sim.participant_shards >= 1`` COMPOSES both shardings on one shared
+    2D ``('client', 'part')`` mesh (``fl/sharding.py::make_mesh2d``): the
+    (N,)-client schedule shards over ``'client'`` (replicated across
+    'part' columns), the packed participants' local SGD shards over
+    ``'part'`` (replicated across 'client' rows, the Algorithm-1 line-7
+    aggregate as a psum), and the all-gathered <= m_cap index pack is the
+    only hand-off between the stages. Each stage's per-device program is
+    identical to its 1D case, so the per-mesh numeric contract carries
+    over: mesh (1, 1) stays bitwise-equal to ``run_simulation_scan`` and
+    integer accounting stays exact on every mesh (tests/test_mesh2d.py).
     """
     from repro.fl.engine import resolve_solve_fn, resolve_wire_dtype
-    from repro.fl.round import local_sgd, masked_aggregate, sample_batches
+    from repro.fl.round import (local_sgd, make_sharded_round_update,
+                                masked_aggregate, sample_batches)
+    from repro.fl.sharding import make_mesh2d
     from repro.models.registry import make_model
 
-    if sim.participant_shards:
-        raise ValueError(
-            "client_shards and participant_shards each own the device "
-            "mesh; nesting them is not supported — pick one")
     n = ds.n_clients
     spec = make_model(sim.model, ds, **dict(sim.model_params))
     wire = resolve_wire_dtype(sim.wire_dtype)
     solve = resolve_solve_fn(scfg, ch, sim.solver, solve_fn)
     co = coeffs if coeffs is not None else decision_coeffs(scfg, ch)
+    mesh2d = None
+    sharded_update = None
+    if sim.participant_shards:
+        mesh2d = make_mesh2d(sim.client_shards, sim.participant_shards)
+        sharded_update = make_sharded_round_update(
+            spec.loss_fn, sim.gamma, sim.local_steps, n,
+            sim.participant_shards, aggregation=sim.aggregation,
+            wire_dtype=wire, mesh=mesh2d)
     schedule = make_sharded_schedule(
         sim.policy, sim.channel, sim.channel_params, scfg, ch, sigmas,
         n_shards=sim.client_shards, m_cap=sim.m_cap, m_avg=sim.uniform_m,
-        solve_fn=solve, population=sim.population,
+        solve_fn=solve, population=sim.population, mesh=mesh2d,
         fused=(sim.solver == "pallas_fused" and sim.policy == "proposed"))
 
     def sim_round(params, pol_state, ch_state, key):
@@ -684,11 +755,15 @@ def make_client_sharded_round(ds, sim, scfg: SchedulerConfig,
         imgs, labs = sample_batches(k_bat, ds.client_images,
                                     ds.client_labels, sel_idx, sim.m_cap,
                                     sim.local_steps, sim.batch)
-        updated = jax.lax.map(
-            lambda b: local_sgd(spec.loss_fn, params, b, sim.gamma,
-                                sim.local_steps), (imgs, labs))
-        new_params = masked_aggregate(params, updated, sel_valid, q_sel, n,
-                                      sim.aggregation, wire)
+        if sharded_update is not None:
+            new_params = sharded_update(params, imgs, labs, sel_valid,
+                                        q_sel)
+        else:
+            updated = jax.lax.map(
+                lambda b: local_sgd(spec.loss_fn, params, b, sim.gamma,
+                                    sim.local_steps), (imgs, labs))
+            new_params = masked_aggregate(params, updated, sel_valid,
+                                          q_sel, n, sim.aggregation, wire)
         return new_params, pol_state, ch_state, t_comm, power, n_sel
 
     return sim_round

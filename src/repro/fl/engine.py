@@ -30,7 +30,13 @@ registries (``repro.core.channel``, ``repro.core.policies``):
   participants sequentially (``lax.map``); D >= 1 shards the participant
   axis over a D-device mesh (``fl/round.py::make_sharded_round_update``)
   with the Algorithm-1 aggregate as a cross-device psum — bitwise-equal to
-  the sequential path at D=1 (tests/test_round_sharded.py).
+  the sequential path at D=1 (tests/test_round_sharded.py). Setting BOTH
+  ``client_shards=Dc`` and ``participant_shards=Dp`` composes the two on
+  one shared (Dc, Dp) mesh ``('client', 'part')``: scheduling shards the
+  client axis over the rows, local SGD the participant axis over the
+  columns, and the all-gathered <= m_cap index pack is the only
+  cross-stage traffic (``fl/sharding.py::make_mesh2d``,
+  tests/test_mesh2d.py).
 
 The multi-scenario grid (channel x sigma-distribution x policy x seed in a
 single ``shard_map`` call across devices) lives in ``repro.fl.grid`` and is
@@ -108,7 +114,12 @@ class SimConfig:
     client_shards: int = 0       # 0: one-device (N,) scheduling; D>=1:
                                  # shard the CLIENT axis (channel step +
                                  # Theorem-2 solve + selection + queues)
-                                 # over D devices (fl/client_shard.py)
+                                 # over D devices (fl/client_shard.py).
+                                 # Composes with participant_shards: both
+                                 # set builds ONE shared (Dc, Dp) mesh
+                                 # ('client', 'part') — scheduling shards
+                                 # the rows, local SGD the columns
+                                 # (fl/sharding.py::make_mesh2d)
     wire_dtype: str = "float32"  # delta-aggregation wire ("float32"|"bfloat16")
     population: Optional[tuple] = None
                                  # None: fixed fleet (the legacy engines,

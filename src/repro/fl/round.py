@@ -188,7 +188,8 @@ def make_sharded_round_update(loss_fn: Callable, gamma: float, steps: int,
                               n_clients: int, n_shards: int, *,
                               aggregation: str = "paper",
                               wire_dtype=jnp.float32,
-                              devices: Optional[list] = None) -> Callable:
+                              devices: Optional[list] = None,
+                              mesh: Optional[Mesh] = None) -> Callable:
     """Participant-sharded round update: the <= m_cap materialized
     participants' local-SGD runs as ONE ``shard_map`` over a participant
     mesh axis, and the q-weighted Algorithm-1 aggregate lowers to a
@@ -221,12 +222,28 @@ def make_sharded_round_update(loss_fn: Callable, gamma: float, steps: int,
     If m_cap is not a multiple of ``n_shards`` the participant axis is
     padded with zero-weight rows (``sel_valid=False``, q=1) — padded rows
     train on zero data and contribute exactly 0 to the aggregate.
+
+    ``mesh`` rides a caller-owned mesh carrying a ``'part'`` axis of
+    extent ``n_shards`` instead of building a private 1D one — the
+    composed 2D round (``fl/sharding.py::make_mesh2d``) passes its shared
+    ``('client', 'part')`` mesh here. The specs below name only
+    ``'part'``, so any extra axes are implicitly replicated and the
+    per-device program is identical to the private-mesh case.
     """
-    devices = list(devices if devices is not None else jax.devices())
-    if not 1 <= n_shards <= len(devices):
-        raise ValueError(f"n_shards={n_shards} needs 1..{len(devices)} "
-                         f"of the available devices")
-    mesh = Mesh(np.array(devices[:n_shards]), ("part",))
+    if mesh is not None:
+        if "part" not in mesh.axis_names:
+            raise ValueError(f"shared mesh {mesh.axis_names} has no "
+                             "'part' axis")
+        if mesh.shape["part"] != n_shards:
+            raise ValueError(
+                f"n_shards={n_shards} != mesh 'part' extent "
+                f"{mesh.shape['part']}")
+    else:
+        devices = list(devices if devices is not None else jax.devices())
+        if not 1 <= n_shards <= len(devices):
+            raise ValueError(f"n_shards={n_shards} needs 1..{len(devices)} "
+                             f"of the available devices")
+        mesh = Mesh(np.array(devices[:n_shards]), ("part",))
 
     def shard_body(params, inputs, labels, sel_valid, q_sel):
         updated = jax.lax.map(
@@ -241,6 +258,23 @@ def make_sharded_round_update(loss_fn: Callable, gamma: float, steps: int,
         in_specs=(P(), P("part"), P("part"), P("part"), P("part")),
         out_specs=P())
 
+    # On a shared mesh with other real axes (the composed 2D round), pin
+    # every operand fully replicated before the shard_map: jax 0.4.37's
+    # GSPMD assembles an in-jit-produced part-sharded / client-replicated
+    # operand with an all-reduce over ALL mesh devices, double-counting
+    # the replicated columns (see fl/client_shard.py's replicate2d — this
+    # is the same bug with the axes' roles swapped). Replicated operands
+    # enter the manual region as a local slice, collective-free.
+    repl2d = any(extent > 1 for name, extent in dict(mesh.shape).items()
+                 if name != "part")
+
+    def _replicate(x):
+        if not repl2d or jnp.ndim(x) == 0:
+            return x
+        from jax.sharding import NamedSharding
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P()))
+
     def update(params, inputs, labels, sel_valid, q_sel):
         m = sel_valid.shape[0]
         pad = (-m) % n_shards
@@ -254,6 +288,8 @@ def make_sharded_round_update(loss_fn: Callable, gamma: float, steps: int,
             sel_valid = jnp.concatenate(
                 [sel_valid, jnp.zeros((pad,), sel_valid.dtype)])
             q_sel = jnp.concatenate([q_sel, jnp.ones((pad,), q_sel.dtype)])
+        params, inputs, labels, sel_valid, q_sel = jax.tree.map(
+            _replicate, (params, inputs, labels, sel_valid, q_sel))
         return sharded(params, inputs, labels, sel_valid, q_sel)
 
     return update

@@ -38,6 +38,8 @@ import inspect
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
 
 from repro.core.fences import pin
 
@@ -63,6 +65,47 @@ def shard_map(f, *, mesh, in_specs, out_specs):
           else {"check_vma": False} if "check_vma" in flags else {})
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       **kw)
+
+
+def make_mesh2d(client_shards: int, part_shards: int,
+                devices=None) -> Mesh:
+    """The ONE shared 2D device mesh ``('client', 'part')`` both sharded
+    stages of a composed round ride.
+
+    ``SimConfig(client_shards=Dc, participant_shards=Dp)`` reshapes the
+    first ``Dc * Dp`` devices to ``(Dc, Dp)``. The composition works
+    because a ``shard_map`` whose specs name only one mesh axis is
+    replicated over the other: the scheduling shard_map keeps its
+    ``P('client')`` specs (every 'part' column runs an identical copy of
+    the per-shard schedule program) and the participant-training shard_map
+    keeps its ``P('part')`` specs (every 'client' row trains the same
+    packed participants) — so each stage's per-device program and
+    collectives are EXACTLY the 1D paths', which is what carries the
+    per-mesh numeric contract over unchanged: ``(Dc, 1)`` matches the old
+    ``client_shards=Dc`` run, ``(1, Dp)`` the old ``participant_shards=Dp``
+    run, and ``(1, 1)`` stays bitwise-equal to ``run_simulation_scan``
+    (tests/test_mesh2d.py). The only cross-stage traffic is the
+    all-gathered <= m_cap participant index pack, replicated on exit from
+    the 'client' stage and re-consumed sharded by the 'part' stage.
+
+    Either extent may be 1 (0 is treated as 1): the degenerate meshes ARE
+    the 1D paths on one shared mesh object.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    dc = max(1, int(client_shards))
+    dp = max(1, int(part_shards))
+    if dc * dp > len(devices):
+        raise ValueError(
+            f"mesh ({dc}, {dp}) = {dc * dp} devices, but only "
+            f"{len(devices)} are available (client_shards * "
+            f"participant_shards must fit the device count)")
+    if ACCOUNT_BLOCKS % dc:
+        raise ValueError(
+            f"client_shards={dc} must divide ACCOUNT_BLOCKS="
+            f"{ACCOUNT_BLOCKS} (the fixed association width of the exact "
+            f"accounting reduce; see blocked_total)")
+    return Mesh(np.array(devices[:dc * dp]).reshape(dc, dp),
+                ("client", "part"))
 
 
 def padded_len(n: int, n_blocks: int = ACCOUNT_BLOCKS) -> int:

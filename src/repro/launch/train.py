@@ -147,10 +147,11 @@ def main(argv=None):
 
     result = run_lm(args) if args.arch else run_fl(args)
     blob = json.dumps(result)
-    if args.out:
+    from repro.launch.distributed import is_main, main_print
+    if args.out and is_main():
         with open(args.out, "w") as f:
             f.write(blob)
-    print(blob)
+    main_print(blob)
 
 
 if __name__ == "__main__":

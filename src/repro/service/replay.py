@@ -102,6 +102,13 @@ class RequestLog:
 
     # ------------------------------------------------------- persistence
     def save(self, path: str) -> None:
+        from repro.launch.distributed import is_main
+        if not is_main():
+            # One log artifact per JOB: under multi-process every rank
+            # appends the same entries (same submits, same flush waves),
+            # so rank 0's copy is the canonical one and the others writing
+            # it too would race on the same path.
+            return
         flat = {"n_entries": np.int64(len(self.entries)),
                 "n_compacted": np.int64(self.n_compacted)}
         if self.snapshot is not None:

@@ -305,7 +305,14 @@ class TenantStore:
             b.state = jax.tree.map(jnp.asarray, st)
 
     def save(self, path: str) -> None:
-        """Persist the snapshot through ``repro.checkpoint.io``."""
+        """Persist the snapshot through ``repro.checkpoint.io``.
+
+        Rank-0 gated: one snapshot artifact per job (every process holds
+        the same replicated store state; see repro/launch/distributed.py).
+        """
+        from repro.launch.distributed import is_main
+        if not is_main():
+            return
         save_pytree(path, self.snapshot())
 
     def load(self, path: str) -> None:

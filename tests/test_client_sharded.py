@@ -219,10 +219,11 @@ def test_guards(setup):
     sig = heterogeneous_sigmas(N)
     params = make_model("mlp", ds).init_fn(jax.random.PRNGKey(1))
     key = jax.random.PRNGKey(2)
-    # client + participant sharding: each owns the mesh
+    # the composed 2D mesh must fit the device count
     with pytest.raises(ValueError, match="mesh"):
         run_simulation_scan(key, params, ds,
-                            _sim(client_shards=1, participant_shards=1),
+                            _sim(client_shards=len(jax.devices()),
+                                 participant_shards=2),
                             scfg, ch, sig)
     # the grid owns the config axis
     with pytest.raises(ValueError, match="CONFIG axis"):

@@ -1,0 +1,170 @@
+"""Composed 2D (client x part) mesh: the cross-mesh parity test matrix.
+
+``SimConfig(client_shards=Dc, participant_shards=Dp)`` runs BOTH sharded
+stages of a round on one shared ``(Dc, Dp)`` mesh ``('client', 'part')``
+(``fl/sharding.py::make_mesh2d``): the (N,)-client scheduling pipeline
+shards over the rows, the packed participants' local SGD over the columns
+(Algorithm-1 line-7 aggregate as a psum), and the all-gathered <= m_cap
+participant index pack is the only cross-stage traffic. Because a
+``shard_map`` whose specs name one axis is replicated over the other,
+each stage's per-device program is EXACTLY its 1D path's — which is the
+composition's whole numeric argument, pinned here as a matrix:
+
+* mesh ``(1, 1)`` — BITWISE-equal to ``run_simulation_scan``: same PRNG
+  raws (drawn full-shape outside both shard_maps), same fenced
+  elementwise stages, value selections not arithmetic.
+* every mesh — integer accounting (round, n_selected) exact; float
+  accounting (comm_time, avg_power) to ~1 ulp: the reductions always
+  associate as the fixed ACCOUNT_BLOCKS blocks (``fl/sharding.py``), the
+  residual is per-lane emission drift of the operand-driven solve.
+* across meshes — trained metrics (test_acc) drift by participant-sum
+  reassociation, bounded by the participant-sharded suite's tolerance.
+
+The matrix covers (1,1), (2,1), (1,2), (2,2), (4,2) — degenerate rows and
+columns ARE the old 1D paths, so their legs double as regression pins —
+over >= 3 policies x >= 2 channel models, plus a population-mask leg
+(churn + stragglers riding the 2D mesh) and a ``pallas_fused`` solver
+leg. Multi-device legs key off ``len(jax.devices())``: under
+scripts/test.sh there are 8 virtual CPU devices; under bare pytest, 1
+(only the bitwise (1,1) leg runs).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ChannelConfig, SchedulerConfig, heterogeneous_sigmas
+from repro.data.synthetic import make_cifar10_like
+from repro.fl.engine import SimConfig, run_simulation_scan
+from repro.fl.sharding import make_mesh2d
+from repro.models.registry import make_model
+
+N = 48
+HIST_KEYS = ("round", "comm_time", "test_acc", "avg_power", "n_selected")
+EXACT_KEYS = ("round", "n_selected")
+FLOAT_ACCOUNT_KEYS = ("comm_time", "avg_power")
+MESHES = ((1, 1), (2, 1), (1, 2), (2, 2), (4, 2))
+POP = (("p_join", 0.3), ("p_leave", 0.2), ("p_fail", 0.25),
+       ("init_active", 0.8))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    ds = make_cifar10_like(key, n_clients=N, per_client=32, n_test=128,
+                           h=8, w=8)
+    ch = ChannelConfig(n_clients=N)
+    scfg = SchedulerConfig(n_clients=N, model_bits=32 * 50000.0)
+    sig = heterogeneous_sigmas(N)
+    params = make_model("mlp", ds).init_fn(jax.random.PRNGKey(1))
+    return ds, ch, scfg, sig, params
+
+
+def _sim(**kw):
+    base = dict(rounds=4, eval_every=2, m_cap=5, batch=4, local_steps=2,
+                eval_size=128, model="mlp")
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _feasible(dc, dp):
+    return dc * dp <= len(jax.devices())
+
+
+def _run(setup, sim):
+    ds, ch, scfg, sig, params = setup
+    return run_simulation_scan(jax.random.PRNGKey(2), params, ds, sim,
+                               scfg, ch, sig)
+
+
+def _assert_mesh(seq, out, dc, dp):
+    tag = f"mesh({dc},{dp})"
+    if (dc, dp) == (1, 1):
+        for k in HIST_KEYS:
+            np.testing.assert_array_equal(seq[k], out[k],
+                                          err_msg=f"{tag} {k}")
+        return
+    for k in EXACT_KEYS:
+        np.testing.assert_array_equal(seq[k], out[k], err_msg=f"{tag} {k}")
+    for k in FLOAT_ACCOUNT_KEYS:
+        np.testing.assert_allclose(seq[k], out[k], rtol=3e-7, atol=0,
+                                   err_msg=f"{tag} {k}")
+    np.testing.assert_allclose(seq["test_acc"], out["test_acc"], atol=2e-2,
+                               err_msg=f"{tag} test_acc")
+
+
+# >= 3 policies x >= 2 channel models, per the acceptance contract.
+CASES = [
+    ("proposed", 0.0, "rayleigh", ()),
+    ("uniform", 4.0, "lognormal", (("shadow_db", 3.0),)),
+    ("greedy_channel", 3.0, "gauss_markov", (("rho", 0.8),)),
+]
+
+
+@pytest.mark.parametrize("policy,uniform_m,channel,channel_params", CASES)
+def test_mesh_matrix(setup, policy, uniform_m, channel, channel_params):
+    """The full (Dc, Dp) matrix against the sequential scan reference."""
+    sim = _sim(policy=policy, uniform_m=uniform_m, channel=channel,
+               channel_params=channel_params)
+    seq = _run(setup, sim)
+    for dc, dp in MESHES:
+        if not _feasible(dc, dp):
+            continue
+        out = _run(setup, dataclasses.replace(
+            sim, client_shards=dc, participant_shards=dp))
+        _assert_mesh(seq, out, dc, dp)
+
+
+def test_population_on_2d_mesh(setup):
+    """Churn + stragglers ride the composed mesh: the activity mask
+    threads through the client-sharded schedule AND the part-sharded
+    training (stragglers keep airtime, drop from the pack)."""
+    sim = _sim(policy="proposed", population=POP)
+    seq = _run(setup, sim)
+    for dc, dp in MESHES:
+        if not _feasible(dc, dp):
+            continue
+        out = _run(setup, dataclasses.replace(
+            sim, client_shards=dc, participant_shards=dp))
+        _assert_mesh(seq, out, dc, dp)
+
+
+def test_pallas_fused_on_2d_mesh(setup):
+    """The fused Pallas decision megakernel drops into the 2D path: the
+    per-shard solve + selection + Eq. 9 + accounting run fused inside the
+    'client' shard_map while local SGD shards over 'part'."""
+    sim = _sim(policy="proposed", solver="pallas_fused")
+    seq = _run(setup, _sim(policy="proposed"))
+    for dc, dp in ((1, 1), (2, 2)):
+        if not _feasible(dc, dp):
+            continue
+        out = _run(setup, dataclasses.replace(
+            sim, client_shards=dc, participant_shards=dp))
+        _assert_mesh(seq, out, dc, dp)
+
+
+def test_mesh2d_shapes_and_guards():
+    """make_mesh2d: axis names/extents; fail fast on infeasible shapes."""
+    n_dev = len(jax.devices())
+    mesh = make_mesh2d(1, 1)
+    assert mesh.axis_names == ("client", "part")
+    assert dict(mesh.shape) == {"client": 1, "part": 1}
+    if n_dev >= 4:
+        mesh = make_mesh2d(2, 2)
+        assert dict(mesh.shape) == {"client": 2, "part": 2}
+    with pytest.raises(ValueError, match="mesh"):
+        make_mesh2d(n_dev, 2)
+    with pytest.raises(ValueError, match="ACCOUNT_BLOCKS"):
+        make_mesh2d(5, 1, devices=jax.devices() * 5)
+
+
+def test_engine_rejects_infeasible_2d(setup):
+    """The engine surfaces the mesh guard before any compilation."""
+    ds, ch, scfg, sig, params = setup
+    with pytest.raises(ValueError, match="mesh"):
+        run_simulation_scan(
+            jax.random.PRNGKey(2), params, ds,
+            _sim(client_shards=len(jax.devices()), participant_shards=2),
+            scfg, ch, sig)
