@@ -762,7 +762,18 @@ def bench_service(prof):
 
     JSON artifact: benchmarks/out/service.json. Latency is wall-clock per
     ``flush()`` (host batching + jit dispatch + device step + host slice),
-    so it is an end-to-end number, not a kernel time.
+    so it is an end-to-end number, not a kernel time — but each scenario
+    now also carries ``segments_ms``, the per-group attribution of that
+    wall into its three host segments (arena staging / async dispatch /
+    result pull) read from the service's own flush-segment histograms
+    (``repro.obs``), so "flush got slower" decomposes instead of being a
+    lump sum.
+
+    The ``obs_overhead`` leg measures what the telemetry itself costs:
+    two identical services — one telemetry-on, one off — serve the SAME
+    request stream with interleaved arms (so machine drift decorrelates
+    from the arm), and ``p50_ratio`` (enabled/disabled flush p50) is
+    gated < 5% by benchmarks/compare.py against the committed baseline.
     """
     import jax  # noqa: F401  (ensures backend init outside the timing)
     from repro.service import SchedulerService
@@ -773,9 +784,24 @@ def bench_service(prof):
     mix = DEFAULT_MIX   # buckets 32 / 128 / 512, >= 1000 tenants
 
     def build(counts_scale=1.0):
-        svc = SchedulerService()
+        svc = SchedulerService(telemetry=True)
         return svc, register_demo_tenants(svc, rng, mix,
                                           scale=counts_scale)
+
+    SEGMENTS = (("stage", "service_flush_stage_seconds"),
+                ("dispatch", "service_flush_dispatch_seconds"),
+                ("pull", "service_flush_pull_seconds"))
+
+    def seg_cursor(svc):
+        """(sum, count) per flush segment — deltas attribute a window."""
+        reg = svc.obs.registry
+        return {k: (reg.histogram(nm).total, reg.histogram(nm).count)
+                for k, nm in SEGMENTS}
+
+    def seg_means_ms(svc, before):
+        cur = seg_cursor(svc)
+        return {f"{k}_ms": 1e3 * (cur[k][0] - before[k][0])
+                / max(1, cur[k][1] - before[k][1]) for k in cur}
 
     def drive(svc, tenants, n_flushes, batch=None):
         walls, served = [], 0
@@ -806,6 +832,7 @@ def bench_service(prof):
         # warm the compiled buckets; random small batches need several
         # passes to visit the power-of-two batch shapes they will draw
         drive(s, t, 1 if batch is None else 6, batch=batch)
+        cursor = seg_cursor(s)
         served, walls = drive(s, t, flushes, batch=batch)
         walls_ms = np.sort(np.asarray(walls)) * 1e3
         dps = served / float(np.sum(walls))
@@ -814,6 +841,7 @@ def bench_service(prof):
             "decisions_per_sec": dps,
             "p50_ms": float(np.percentile(walls_ms, 50)),
             "p99_ms": float(np.percentile(walls_ms, 99)),
+            "segments_ms": seg_means_ms(s, cursor),
         }
         results["scenarios"][label] = entry
         _emit(f"service_{label}", 1e6 * float(np.sum(walls)) / served,
@@ -826,6 +854,7 @@ def bench_service(prof):
     # untouched), so the measured p99 is steady-state staging + dispatch,
     # not a mid-measurement shape compile.
     svc.warmup(max_batch=8)
+    cursor = seg_cursor(svc)
     walls, served = [], 0
     for _ in range(max(40, 4 * flushes)):
         b = int(rng.integers(1, 9))
@@ -845,6 +874,7 @@ def bench_service(prof):
         "decisions_per_sec": dps,
         "p50_ms": float(np.percentile(walls_ms, 50)),
         "p99_ms": float(np.percentile(walls_ms, 99)),
+        "segments_ms": seg_means_ms(svc, cursor),
     }
     results["scenarios"]["smallflush"] = entry
     _emit("service_smallflush", 1e6 * float(np.sum(walls)) / served,
@@ -873,6 +903,46 @@ def bench_service(prof):
     }
     _emit("service_evict_churn", 1e6 * wall / n_cycles,
           f"cycles_per_sec={cps:.1f};tenants={len(tenants100)}")
+
+    # obs_overhead: what does telemetry itself cost on the flush path?
+    # Two identical 100-tenant services — one telemetry-on, one off —
+    # serve the SAME request stream; arms are interleaved (and alternate
+    # order) so machine drift decorrelates from the arm. The committed
+    # baseline pins p50_ratio ~ 1.0 and compare.py gates it < 5%.
+    svc_on = SchedulerService(telemetry=True)
+    t_on = register_demo_tenants(svc_on, np.random.default_rng(7), mix,
+                                 scale=0.1)
+    svc_off = SchedulerService(telemetry=False)
+    register_demo_tenants(svc_off, np.random.default_rng(7), mix,
+                          scale=0.1)
+    svc_on.warmup(max_batch=16)
+    svc_off.warmup(max_batch=16)
+    req_rng = np.random.default_rng(11)
+    walls_on, walls_off = [], []
+    n_obs = max(40, 4 * flushes)
+    for i in range(n_obs):
+        subset = [t_on[j] for j in req_rng.choice(len(t_on), 16,
+                                                  replace=False)]
+        reqs = [demo_request(req_rng, *t) for t in subset]
+        arms = [(svc_on, walls_on), (svc_off, walls_off)]
+        if i % 2:
+            arms.reverse()
+        for s, walls in arms:
+            t0 = time.time()
+            for name, gains, raw in reqs:
+                s.submit(name, gains, raw=raw)
+            s.flush(log=False)
+            walls.append(time.time() - t0)
+    p50_on = float(np.percentile(np.asarray(walls_on) * 1e3, 50))
+    p50_off = float(np.percentile(np.asarray(walls_off) * 1e3, 50))
+    ratio = p50_on / p50_off
+    results["scenarios"]["obs_overhead"] = {
+        "tenants": len(t_on), "flushes": n_obs, "batch": 16,
+        "p50_ms_enabled": p50_on, "p50_ms_disabled": p50_off,
+        "p50_ratio": ratio,
+    }
+    _emit("service_obs_overhead", 1e3 * p50_on,
+          f"p50_ratio={ratio:.3f};on_ms={p50_on:.2f};off_ms={p50_off:.2f}")
     _dump("service", results)
     return results
 

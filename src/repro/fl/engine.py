@@ -77,6 +77,8 @@ from repro.fl.round import (local_sgd, make_sharded_round_update,
                             masked_aggregate, pack_participants,
                             sample_batches)
 from repro.models.registry import make_model
+from repro.obs import metrics as obs_metrics
+from repro.obs.instrument import EngineInstruments, perf
 
 # fold_in tag consumed by stateful channel inits (keeps the round-key chain
 # identical to the stateless models', so rayleigh trajectories are unchanged)
@@ -402,9 +404,19 @@ def make_chunk_runner(ds: FederatedDataset, sim: SimConfig,
     runtime argument (supplied by the returned wrapper) — the operand
     contract that makes the engine's per-round decisions bitwise-equal to
     the multi-tenant service's (``repro/fl/decision.py``).
+
+    Telemetry (``repro.obs``, follows the process-wide ``configure``
+    switch): each chunk length's first call counts an
+    ``engine_compile_misses_total`` miss (``n_rounds`` is static, so a
+    new length IS a fresh compile); with telemetry ON each chunk also
+    records its wall time and the post-chunk Z-queue summary gauges
+    (Eq. 9) — that pull synchronizes on the chunk result, trading the
+    async overlap for live queue visibility, and changes no numerics
+    (the returned carry is bitwise the same; tests/test_obs.py).
     """
     eval_fn = make_eval_fn(ds, sim)
     co_host = decision_coeffs(scfg, ch)
+    ei = EngineInstruments(obs_metrics.default_registry())
 
     @functools.partial(jax.jit, static_argnames=("n_rounds",),
                        donate_argnums=(0,))
@@ -414,7 +426,17 @@ def make_chunk_runner(ds: FederatedDataset, sim: SimConfig,
         return scan_chunk(sim_round, eval_fn, carry, n_rounds)
 
     def run_chunk(carry, n_rounds):
-        return _run_chunk(carry, co_host, n_rounds)
+        fresh = ei.compiles.miss(("run_chunk", n_rounds),
+                                 entry="run_chunk", n_rounds=n_rounds)
+        t0 = perf()
+        carry, acc, nsel = _run_chunk(carry, co_host, n_rounds)
+        if fresh:
+            # jit traces + compiles synchronously at call time
+            ei.compiles.compile_s.inc(perf() - t0)
+        if ei.enabled:
+            ei.record_policy_state(carry[1])   # syncs: chunk truly done
+            ei.chunk_s.record(perf() - t0)
+        return carry, acc, nsel
 
     return run_chunk
 
@@ -549,11 +571,25 @@ def run_simulation_scan(key, params, ds: FederatedDataset, sim: SimConfig,
     (round / comm_time / test_acc / avg_power / n_selected) matches the
     legacy engine. Any registered channel model and policy is accepted
     (the legacy loop knows only rayleigh + proposed/uniform).
+
+    With process-wide telemetry on (``repro.obs.configure(True)``) the
+    run records rounds/s, per-interval comm-time deltas (Eq. 8), and
+    selection counts against the default registry — all computed from
+    the already-materialized history arrays AFTER the compiled call, so
+    the trajectory is bitwise-identical either way (tests/test_obs.py).
     """
+    ei = EngineInstruments(obs_metrics.default_registry())
+    t0 = perf()
     runner = make_config_runner(ds, sim, scfg, ch, sigmas)
+    # a fresh runner is jitted per call, so every run pays one compile
+    ei.compiles.miss(("config_runner", sim.rounds), entry="config_runner",
+                     policy=sim.policy, rounds=sim.rounds)
     comm, acc, pcum, nsel = runner(params, key)
-    return history_from_trajectory(sim.rounds, sim.eval_every,
+    hist = history_from_trajectory(sim.rounds, sim.eval_every,
                                    ds.n_clients, comm, acc, pcum, nsel)
+    if ei.enabled:
+        ei.record_history(hist, perf() - t0)   # host arrays: already sync
+    return hist
 
 
 # --------------------------------------------------------------------------

@@ -35,6 +35,8 @@ from repro.core import ChannelConfig, SchedulerConfig
 from repro.data.synthetic import FederatedDataset
 from repro.fl.engine import SimConfig
 from repro.fl.grid import GridSpec, run_grid
+from repro.obs import metrics as obs_metrics
+from repro.obs.instrument import TournamentInstruments, perf
 
 __all__ = ["run_tournament", "tournament_metrics", "leaderboard"]
 
@@ -137,7 +139,15 @@ def run_tournament(key, params, ds: FederatedDataset, sim: SimConfig,
 
     Baseline policies need ``sim.uniform_m > 0`` (matched M), exactly as
     in ``run_grid``.
+
+    With process-wide telemetry on (``repro.obs.configure(True)``) the
+    sweep records its scale (configs, configs/s, sweep wall) and the
+    scored per-policy accuracy regrets against the default registry —
+    host numpy over the finished leaderboard, after the compiled grid
+    call, so trajectories are bitwise-unchanged.
     """
+    ti = TournamentInstruments(obs_metrics.default_registry())
+    t0 = perf()
     spec = GridSpec(channels=tuple(channels), sigma_dists=tuple(sigma_dists),
                     policies=tuple(policies), seeds=tuple(seeds),
                     populations=tuple(tuple(p) for p in populations))
@@ -145,4 +155,6 @@ def run_tournament(key, params, ds: FederatedDataset, sim: SimConfig,
     out = dict(grid)
     out.update(tournament_metrics(grid, acc_target_frac))
     out["leaderboard"] = leaderboard(out, grid["policies"])
+    if ti.enabled:
+        ti.record(spec.size, perf() - t0, out["leaderboard"])
     return out

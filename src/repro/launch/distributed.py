@@ -10,10 +10,14 @@ Two things live here, deliberately small:
 * :func:`is_main` / :func:`main_print` / :func:`main_only` — the
   ``process_index == 0`` gate every logging/IO site in the repo routes
   through (benchmark emit/dump, service log + snapshot writes, launch
-  drivers), so a multi-process run produces ONE copy of every artifact
-  instead of ``process_count`` clobbering copies. Uninitialized
-  (single-process) jax reports ``process_index() == 0``, so the gate is a
-  no-op in every existing entry point.
+  drivers, the telemetry layer's JSONL event-log writes in
+  ``repro.obs.export``), so a multi-process run produces ONE copy of
+  every artifact instead of ``process_count`` clobbering copies.
+  Uninitialized (single-process) jax reports ``process_index() == 0``,
+  so the gate is a no-op in every existing entry point. In-memory
+  telemetry (``repro.obs`` counters/histograms) is deliberately NOT
+  gated — every rank keeps its own registry; only exported artifacts
+  are rank-0.
 
 What multi-process does NOT change: the numeric contract. The composed
 2D mesh (``fl/sharding.py::make_mesh2d``) is built from ``jax.devices()``

@@ -19,11 +19,12 @@ from repro.service.batching import Decision, SchedulerService
 from repro.service.replay import LoggedRequest, RequestLog
 from repro.service.state import BucketKey, TenantSpec, TenantStore
 from repro.service.step import (SERVICE_POLICIES, make_bucket_step,
-                                policy_coeffs)
+                                policy_coeffs, step_signature)
 
 __all__ = [
     "Decision", "SchedulerService",
     "LoggedRequest", "RequestLog",
     "BucketKey", "TenantSpec", "TenantStore",
     "SERVICE_POLICIES", "make_bucket_step", "policy_coeffs",
+    "step_signature",
 ]

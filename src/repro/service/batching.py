@@ -38,13 +38,26 @@ tenant — re-admits it with bitwise-identical queues. ``evict_lru()``
 picks the least-recently-used resident. ``compact_log()`` snapshots
 state and drops the served log entries, bounding host memory while
 keeping replay bit-exact.
+
+Telemetry (``repro.obs``, off by default): the service records flush
+latency split into its three host segments (arena staging / async
+dispatch / result pull), per-bucket group occupancy and pad waste, queue
+depth, per-decision comm time, tenant lifecycle counters, replay-log
+growth, and — keyed by ``step_signature`` — every jit-cache miss the
+serving path pays (the PR-8 silent-recompile pathology, made visible;
+``warmup()`` seeds the tracker so warm hits are counted too). All
+recording is host-side, outside jit, which keeps telemetry-on serving
+and replay bitwise-identical to telemetry-off (tests/test_obs.py).
+``metrics_snapshot()`` exports dict / JSON / Prometheus text.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import re
-from typing import Dict, List, NamedTuple, Optional
+import warnings
+from typing import Dict, List, NamedTuple, Optional, Union
 
 import jax
 import numpy as np
@@ -54,10 +67,14 @@ from repro.core.channel import ChannelConfig
 from repro.core.policies import POLICY_DRAWS, PolicyState
 from repro.core.scheduler import SchedulerConfig
 from repro.fl.client_shard import POLICY_RAW_PAD
+from repro.obs import metrics as obs_metrics
+from repro.obs.export import EventLog, json_snapshot, prometheus_text
+from repro.obs.instrument import ServiceInstruments, perf
+from repro.obs.profile import trace_span
 from repro.service.replay import LoggedRequest, RequestLog
 from repro.service.state import (BucketKey, TenantSpec, TenantStore,
                                  bucket_width)
-from repro.service.step import make_bucket_step
+from repro.service.step import make_bucket_step, step_signature
 
 GAINS_PAD = 0.0  # below every clipped channel gain (gain_bounds lo > 0)
 
@@ -211,7 +228,10 @@ class SchedulerService:
     """
 
     def __init__(self, solver: str = "jnp", log_requests: bool = True,
-                 staging: bool = True, spill_dir: Optional[str] = None):
+                 staging: bool = True, spill_dir: Optional[str] = None,
+                 telemetry: Optional[bool] = None,
+                 event_log: Union[None, str, EventLog] = None,
+                 log_warn_bytes: float = float(1 << 28)):
         """``log_requests=False`` disables the replay log entirely;
         deployments that keep it should call :meth:`compact_log` on their
         checkpoint cadence — compaction records the snapshot in the log,
@@ -223,7 +243,25 @@ class SchedulerService:
 
         ``spill_dir`` routes :meth:`evict` state spills through the
         checkpoint substrate on disk; by default spilled rows stay on the
-        host heap."""
+        host heap.
+
+        ``telemetry`` turns this service's metrics registry on/off
+        (``None`` inherits the process-wide ``repro.obs.configure``
+        switch, which starts off). All recording is host-side and outside
+        jit: served decisions, queue updates, and replay are
+        BITWISE-IDENTICAL with telemetry on or off (tests/test_obs.py);
+        off, the hot path pays one attribute load + no-op call per site.
+        Read metrics via :meth:`metrics_snapshot`.
+
+        ``event_log`` — an optional JSONL path (or shared
+        :class:`~repro.obs.export.EventLog`) for lifecycle events (admit
+        / evict / reload / compact / warmup / log-growth warnings). The
+        in-memory event tail is always kept; file writes are rank-0
+        gated.
+
+        ``log_warn_bytes`` — estimated retained replay-log bytes above
+        which the service warns (once) that the unbounded-by-design log
+        wants a :meth:`compact_log` cadence. Default 256 MiB."""
         if solver not in ("jnp", "pallas", "pallas_fused"):
             raise ValueError(f"unknown solver {solver!r} "
                              "(want 'jnp'|'pallas'|'pallas_fused')")
@@ -231,7 +269,12 @@ class SchedulerService:
         self.log_requests = log_requests
         self.staging = staging
         self.spill_dir = spill_dir
+        self.obs = ServiceInstruments(obs_metrics.new_registry(telemetry))
+        self.events = (event_log if isinstance(event_log, EventLog)
+                       else EventLog(event_log))
+        self.log_warn_bytes = float(log_warn_bytes)
         self.store = TenantStore()
+        self.store.obs = self.obs
         self.log = RequestLog()
         self._waves: List[_Wave] = []
         self._steps: Dict[BucketKey, object] = {}
@@ -241,6 +284,7 @@ class SchedulerService:
         self._spill_seq = 0
         self._tick = 0
         self._last_used: Dict[str, int] = {}
+        self._bstrs: Dict[BucketKey, str] = {}   # cached as_string() forms
 
     # ------------------------------------------------------------ tenants
     def add_tenant(self, name: str, scfg: SchedulerConfig,
@@ -253,7 +297,17 @@ class SchedulerService:
                                          policy=policy, m_avg=m_avg))
         self._invalidate_step(spec.bucket)
         self._touch(name)
+        self.events.emit("admit", tenant=name,
+                         bucket=self._bucket_str(spec.bucket))
         return spec
+
+    def _bucket_str(self, bkey: BucketKey) -> str:
+        """Cached ``bkey.as_string()`` (metric labels, events) — the flush
+        path does a dict lookup instead of re-formatting per group."""
+        s = self._bstrs.get(bkey)
+        if s is None:
+            s = self._bstrs[bkey] = bkey.as_string()
+        return s
 
     def _invalidate_step(self, bkey: BucketKey) -> None:
         """Drop a bucket's cached step if tenant-set changes can affect
@@ -265,6 +319,10 @@ class SchedulerService:
         variants across evict/reload churn and across admissions."""
         if self.solver == "pallas":
             self._steps.pop(bkey, None)
+            # the new step instance has a fresh jit cache — drop the
+            # host-side mirror too, so re-dispatched shapes count as the
+            # fresh compiles they are
+            self.obs.compiles.forget(bkey)
 
     def raw_structure(self, name: str):
         """An example raw-draw pytree for this tenant (log loading)."""
@@ -340,6 +398,7 @@ class SchedulerService:
                 wave.stages[bkey] = stage
             stage.put(spec.n, gains, jax.tree.leaves(raw))
         self._touch(name)
+        self.obs.submits.inc()
 
     @property
     def n_queued(self) -> int:
@@ -359,13 +418,24 @@ class SchedulerService:
         replay from the last snapshot reproduces the live state bit for
         bit even across the failure.
         """
+        obs = self.obs
+        t_start = perf()
+        if obs.enabled:
+            obs.queue_depth.set(self.n_queued)
+        annotate = obs_metrics.enabled()   # profiler spans: global switch
         waves, self._waves = self._waves, []
         pending = []
         try:
-            for w in waves:
+            for wi, w in enumerate(waves):
                 for bkey, reqs in w.groups.items():
-                    outs = self._dispatch_group(bkey, reqs,
-                                                w.stages.get(bkey))
+                    if annotate:
+                        with trace_span("service.flush/wave"
+                                        f"{wi}/{self._bucket_str(bkey)}"):
+                            outs = self._dispatch_group(
+                                bkey, reqs, w.stages.get(bkey))
+                    else:
+                        outs = self._dispatch_group(bkey, reqs,
+                                                    w.stages.get(bkey))
                     if log and self.log_requests:
                         self.log.append_entry(
                             [LoggedRequest(*r) for r in reqs])
@@ -375,7 +445,9 @@ class SchedulerService:
                 for bkey, stage in w.stages.items():
                     stage.reset()
                     self._pool.setdefault(bkey, []).append(stage)
+        t_pull = perf()
         responses: Dict[str, Decision] = {}
+        rec_t_comm = obs.t_comm.record if obs.enabled else None
         for reqs, (sel, q, p, t_comm, power, n_sel) in pending:
             sel, q, p = np.asarray(sel), np.asarray(q), np.asarray(p)
             t_comm, power = np.asarray(t_comm), np.asarray(power)
@@ -386,7 +458,40 @@ class SchedulerService:
                     sel=sel[i, :n], q=q[i, :n], p=p[i, :n],
                     t_comm=t_comm[i], power=power[i],
                     n_sel=np.int64(n_sel[i]))
+                if rec_t_comm is not None:
+                    rec_t_comm(float(t_comm[i]))
+        t_end = perf()
+        obs.pull_s.record(t_end - t_pull)
+        obs.flush_s.record(t_end - t_start)
+        obs.flushes.inc()
+        if log and self.log_requests:
+            self._log_health()
         return responses
+
+    def _log_health(self) -> None:
+        """Replay-log growth gauges + the one-time threshold warning.
+
+        The log is unbounded BY DESIGN (it is the replay trajectory);
+        this surfaces that instead of footnoting it — when the estimated
+        retained bytes cross ``log_warn_bytes`` the service emits one
+        ``log_growth_warning`` event and one Python warning nudging the
+        :meth:`compact_log` cadence."""
+        est = self.log.bytes_est
+        self.obs.log_entries.set(len(self.log))
+        self.obs.log_bytes.set(est)
+        if est > self.log_warn_bytes:
+            rec = self.events.once(
+                "log_growth", "log_growth_warning",
+                entries=len(self.log), bytes_est=est,
+                threshold=self.log_warn_bytes)
+            if rec is not None:
+                warnings.warn(
+                    f"replay log holds ~{est / 2**20:.0f} MiB across "
+                    f"{len(self.log)} entries (threshold "
+                    f"{self.log_warn_bytes / 2**20:.0f} MiB); it grows "
+                    "unbounded by design — call compact_log() on your "
+                    "checkpoint cadence to bound host memory",
+                    RuntimeWarning, stacklevel=3)
 
     def warmup(self, max_batch: int = 8) -> None:
         """Pre-compile every bucket's step for all power-of-two batch
@@ -394,9 +499,12 @@ class SchedulerService:
         scatter drops every row, so tenant state is bitwise-untouched).
         Moves the compile spikes out of the serving path: small-flush p99
         becomes steady-state instead of a first-shape compilation."""
+        obs = self.obs
+        n_warmed = 0
         for bkey, bucket in self.store.buckets().items():
             step = self._bucket_step(bkey, bucket)
             proto = self._proto(bkey.policy)
+            bstr = self._bucket_str(bkey)
             b = 1
             while b <= _next_pow2(max_batch):
                 rows = np.full((b,), bucket.size, np.int32)
@@ -404,11 +512,23 @@ class SchedulerService:
                 raw = jax.tree.unflatten(proto.treedef, [
                     np.zeros((b,) if s else (b, bkey.n_bucket), d)
                     for s, d in zip(proto.scalar, proto.dtypes)])
+                fresh = obs.compiles.warm(
+                    step_signature(bkey, bucket.size, b, self.solver),
+                    bucket=bstr, batch=b, solver=self.solver)
+                t0 = perf()
                 out = step(bucket.state, bucket.coeffs, bucket.acct,
                            bucket.n_real, rows, gains, raw)
+                if fresh:
+                    # jit traces + compiles synchronously at call time
+                    # (only execution is async), so the first call's wall
+                    # is trace + compile + dispatch
+                    obs.compiles.compile_s.inc(perf() - t0)
+                    n_warmed += 1
                 bucket.state = out[-1]
                 b *= 2
             jax.block_until_ready(bucket.state.z)
+        self.events.emit("warmup", shapes_compiled=n_warmed,
+                         max_batch=max_batch)
 
     def _bucket_step(self, bkey: BucketKey, bucket):
         if bkey not in self._steps:
@@ -440,19 +560,39 @@ class SchedulerService:
         """Dispatch one (wave, bucket) group; returns device outputs
         WITHOUT pulling them (async — the next group's host staging
         overlaps this group's device compute)."""
+        obs = self.obs
         bucket = self.store.buckets()[bkey]
         step = self._bucket_step(bkey, bucket)
         b_pad = _next_pow2(len(reqs))
         row_ids = [self.store.row(r.tenant) for r in reqs]
+        t0 = perf()
         if stage is not None:
             rows, gains, raw = stage.batch(row_ids, bucket.size, b_pad)
         else:
             rows, gains, raw = self._legacy_batch(bkey, bucket, reqs,
                                                   row_ids, b_pad)
+        t1 = perf()
+        fresh = obs.compiles.miss(
+            step_signature(bkey, bucket.size, b_pad, self.solver),
+            bucket=self._bucket_str(bkey), batch=b_pad,
+            solver=self.solver)
         sel, q, p, t_comm, power, n_sel, new_state = step(
             bucket.state, bucket.coeffs, bucket.acct, bucket.n_real,
             rows, gains, raw)
+        t2 = perf()
         bucket.state = new_state      # old buffers were donated
+        obs.stage_s.record(t1 - t0)
+        obs.dispatch_s.record(t2 - t1)
+        if fresh:
+            # first dispatch of a shape traces + compiles synchronously;
+            # its wall is the compile spike the serving path just paid
+            obs.compiles.compile_s.inc(t2 - t1)
+        if obs.enabled:
+            occ, waste = obs.bucket(self._bucket_str(bkey))
+            occ.record(len(reqs))
+            waste.record((b_pad - len(reqs)) / b_pad)
+            obs.groups.inc()
+            obs.requests.inc(len(reqs))
         return sel, q, p, t_comm, power, n_sel
 
     def _legacy_batch(self, bkey: BucketKey, bucket, reqs, row_ids,
@@ -500,6 +640,10 @@ class SchedulerService:
             self._spilled[name] = (spec, path)
         else:
             self._spilled[name] = (spec, row)
+        self.obs.spills.inc()
+        self.obs.spilled.set(len(self._spilled))
+        self.events.emit("evict", tenant=name,
+                         spill="disk" if self.spill_dir else "heap")
         return row
 
     def reload(self, name: str) -> TenantSpec:
@@ -520,6 +664,9 @@ class SchedulerService:
         out = self.store.readmit(spec, row)
         self._invalidate_step(spec.bucket)
         self._touch(name)
+        self.obs.reloads.inc()
+        self.obs.spilled.set(len(self._spilled))
+        self.events.emit("reload", tenant=name)
         return out
 
     def evict_lru(self) -> str:
@@ -568,5 +715,49 @@ class SchedulerService:
             raise ValueError("flush() before compacting the log "
                              "(queued requests are not yet in it)")
         snap = self.snapshot()
-        self.log.compact(snap)
+        dropped = self.log.compact(snap)
+        self.obs.log_compactions.inc()
+        self.obs.log_entries.set(0)
+        self.obs.log_bytes.set(0)
+        self.events.emit("compact", entries_dropped=dropped)
+        return snap
+
+    # --------------------------------------------------------- telemetry
+    def metrics_snapshot(self, fmt: str = "dict"):
+        """This service's metrics, in one of three formats.
+
+        ``fmt="dict"`` (default) — a JSON-serializable dict: the metric
+        list plus on-demand extras (tenant counts, per-bucket Z-queue
+        summaries — the paper's Eq. 9 virtual power queues, pulled to the
+        host HERE, off the serving path, and only when telemetry is on).
+        ``fmt="json"`` — the same, serialized. ``fmt="prometheus"`` —
+        the Prometheus text exposition format, ready to serve from a
+        ``/metrics`` endpoint. With telemetry off, returns the empty
+        registry (and skips the device pulls entirely).
+        """
+        obs = self.obs
+        if obs.enabled:
+            obs.queue_depth.set(self.n_queued)
+            for bkey, b in self.store.buckets().items():
+                bstr = self._bucket_str(bkey)
+                z = np.asarray(b.state.z)    # host pull, snapshot-time only
+                g = obs.registry.gauge
+                g("service_z_mean", bucket=bstr).set(float(z.mean()))
+                g("service_z_max", bucket=bstr).set(float(z.max()))
+                g("service_bucket_tenants", bucket=bstr).set(b.size)
+        if fmt == "prometheus":
+            return prometheus_text(obs.registry)
+        snap = json_snapshot(
+            obs.registry,
+            tenants={"resident": len(self.store),
+                     "spilled": len(self._spilled)},
+            queued=self.n_queued,
+            log={"entries": len(self.log), "bytes_est": self.log.bytes_est,
+                 "n_compacted": self.log.n_compacted},
+            compile_misses=self.obs.compiles.misses_total())
+        if fmt == "json":
+            return json.dumps(snap)
+        if fmt != "dict":
+            raise ValueError(f"unknown fmt {fmt!r} "
+                             "(want 'dict'|'json'|'prometheus')")
         return snap

@@ -56,6 +56,10 @@ class RequestLog:
         self.entries: List[List[LoggedRequest]] = []
         self.snapshot: Optional[Dict[str, PolicyState]] = None
         self.n_compacted: int = 0    # entries dropped by compact()
+        self.bytes_est: int = 0      # retained payload estimate, tracked
+        #                              incrementally (O(1) to read — the
+        #                              service surfaces it as a gauge and
+        #                              warns when it crosses a threshold)
 
     def __len__(self) -> int:
         return len(self.entries)
@@ -65,6 +69,12 @@ class RequestLog:
         return sum(len(e) for e in self.entries)
 
     def append_entry(self, requests: List[LoggedRequest]) -> None:
+        est = 0
+        for r in requests:
+            est += r.gains.nbytes + len(r.tenant) + 64  # + container slop
+            for leaf in jax.tree.leaves(r.raw):
+                est += np.asarray(leaf).nbytes
+        self.bytes_est += est
         self.entries.append(list(requests))
 
     # --------------------------------------------------------- compaction
@@ -78,6 +88,7 @@ class RequestLog:
         self.snapshot = jax.tree.map(np.asarray, snapshot)
         self.n_compacted += dropped
         self.entries = []
+        self.bytes_est = 0
         return dropped
 
     # ------------------------------------------------------------- replay

@@ -59,6 +59,7 @@ from repro.core.policies import POLICIES, PolicyState, policy_aux_init
 from repro.core.scheduler import SchedulerConfig
 from repro.fl.decision import account_coeffs
 from repro.fl.sharding import padded_len
+from repro.obs.instrument import noop_instruments
 from repro.service.step import SERVICE_POLICIES, policy_coeffs
 
 
@@ -167,6 +168,11 @@ class TenantStore:
         self._tenants: Dict[str, TenantSpec] = {}
         self._buckets: Dict[BucketKey, _Bucket] = {}
         self._dirty: set = set()
+        # telemetry hook: admit/evict counters + resident gauge. Defaults
+        # to a disabled bundle (every metric a shared no-op) so the store
+        # stays usable standalone; the owning SchedulerService installs
+        # its own ServiceInstruments here.
+        self.obs = noop_instruments()
 
     # ------------------------------------------------------------ registry
     def add(self, spec: TenantSpec) -> TenantSpec:
@@ -194,6 +200,8 @@ class TenantStore:
         self._tenants[spec.name] = spec
         bucket.tenants.append(spec)
         self._dirty.add(spec.bucket)
+        self.obs.admits.inc()
+        self.obs.resident.set(len(self._tenants))
         return spec
 
     def evict(self, name: str) -> PolicyState:
@@ -211,6 +219,8 @@ class TenantStore:
             self._dirty.discard(spec.bucket)
         else:
             self._dirty.add(spec.bucket)
+        self.obs.evicts.inc()
+        self.obs.resident.set(len(self._tenants))
         return row
 
     def readmit(self, spec: TenantSpec, row: PolicyState) -> TenantSpec:

@@ -142,6 +142,21 @@ _POLICY_CORES = {
 }
 
 
+def step_signature(bkey, n_tenants: int, batch: int, solver: str) -> tuple:
+    """The compile-cache signature of one bucket-step dispatch.
+
+    A step compiles one program variant per (tenant count T, padded batch
+    size B) operand-shape pair — T and B enter only as shapes (module
+    docstring) — within the program family the bucket key + solver
+    select. The batcher keys its host-side recompile tracking
+    (``repro.obs``'s ``CompileTracker``) on exactly this tuple so the
+    tracked misses mirror the jit cache one-for-one: a miss here IS a
+    fresh XLA compile on the serving path (the PR-8 latency-cliff
+    pathology, now a visible counter instead of a silent p99 spike).
+    """
+    return (bkey, int(n_tenants), int(batch), solver)
+
+
 def make_bucket_step(policy: str, n_bucket: int, acct_len: int,
                      guarantee_one: bool, solve_fn=None,
                      fused: bool = False):
